@@ -1,0 +1,38 @@
+"""Paper Fig 4(a) + 4(c): makespan and superstep counts, Gopher (sub-graph
+centric) vs the vertex-centric baseline (our Giraph stand-in), for Connected
+Components / SSSP / PageRank on RN / TR / LJ analogues."""
+from __future__ import annotations
+
+from repro.algorithms import connected_components, pagerank, sssp
+from benchmarks.common import DATASETS, get_pg, emit, timed
+
+
+def run():
+    rows = []
+    for ds in ("RN", "TR", "LJ"):
+        g, pg = get_pg(ds)
+        for algo, fn in (
+            ("cc", lambda m: connected_components(pg, mode=m)),
+            ("sssp", lambda m: sssp(pg, 0, mode=m)),
+            ("pagerank", lambda m: pagerank(pg, num_iters=30)),
+        ):
+            for mode in ("subgraph", "vertex"):
+                if algo == "pagerank" and mode == "vertex":
+                    continue  # identical program; Gopher "simulates" it (paper §5.3)
+                out, dt = timed(fn, mode, warmup=True)
+                tele = out[-1]
+                emit(f"fig4a_makespan_{algo}_{ds}_{mode}", dt,
+                     f"supersteps={tele.supersteps}")
+                rows.append((ds, algo, mode, dt, tele.supersteps))
+    # paper claim check: sub-graph supersteps <= vertex supersteps
+    by = {}
+    for ds, algo, mode, dt, ss in rows:
+        by.setdefault((ds, algo), {})[mode] = ss
+    for (ds, algo), m in by.items():
+        if "subgraph" in m and "vertex" in m:
+            assert m["subgraph"] <= m["vertex"], (ds, algo, m)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

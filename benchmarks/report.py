@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSON."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def roofline_table(path: str, mesh: str) -> str:
+    rs = [r for r in json.load(open(path))
+          if r.get("mesh") == mesh and not r.get("skipped") and "error" not in r]
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck "
+           "| MODEL/HLO flops | roofline frac | args GiB/dev | temp GiB/dev |",
+           "|---|---|---:|---:|---:|---|---:|---:|---:|---:|"]
+    for r in sorted(rs, key=lambda x: (x["arch"], x["shape"])):
+        m = r.get("mem_stats") or {}
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} "
+            f"| {r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {m.get('argument', 0)/2**30:.2f} | {m.get('temp', 0)/2**30:.2f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(path: str) -> str:
+    rs = json.load(open(path))
+    out = ["| arch | shape | 16x16 | 2x16x16 | collective mix (16x16, GB/dev) |",
+           "|---|---|---|---|---|"]
+    cells = {}
+    for r in rs:
+        key = (r["arch"], r["shape"])
+        cells.setdefault(key, {})[r.get("mesh", "16x16")] = r
+    for (a, s), by in sorted(cells.items()):
+        row = []
+        for mesh in ("16x16", "2x16x16"):
+            r = by.get(mesh)
+            if r is None:
+                row.append("—")
+            elif r.get("skipped"):
+                row.append("skip")
+            elif "error" in r:
+                row.append("FAIL")
+            else:
+                row.append(f"OK ({r['compile_seconds']:.0f}s)")
+        r = by.get("16x16", {})
+        mix = ""
+        cd = r.get("coll_detail", {}).get("bytes", {})
+        if cd:
+            mix = " ".join(f"{k.split('-')[-1]}={v/1e9:.1f}"
+                           for k, v in cd.items() if v > 1e8)
+        out.append(f"| {a} | {s} | {row[0]} | {row[1]} | {mix} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_final.json"
+    print("## Dry-run matrix\n")
+    print(dryrun_table(path))
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(roofline_table(path, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(path, "2x16x16"))

@@ -1,0 +1,38 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+    fig4a_*   makespan, Gopher vs vertex-centric (paper Fig 4a)
+    fig4b_*   load time, GoFS vs monolithic (paper Fig 4b)
+    fig4c_*   superstep counts + diameter correlation (paper Fig 4c, §6.3)
+    fig5_*    straggler/skew distribution + partitioner fix (paper Fig 5, §7)
+    blockrank_* BlockRank vs classic PageRank supersteps (paper §5.3)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _blockrank():
+    from benchmarks.common import emit, get_pg, timed
+    from repro.algorithms import blockrank, pagerank
+    g, pg = get_pg("RN")
+    (r1, t1), dt1 = timed(lambda: pagerank(pg, num_iters=60, tol=1e-7))
+    (r2, t2, info), dt2 = timed(lambda: blockrank(pg, tol=1e-7, max_iters=60))
+    emit("blockrank_classic_RN", dt1, f"supersteps={t1.supersteps}")
+    emit("blockrank_seeded_RN", dt2,
+         f"supersteps={t2.supersteps};blocks={info['num_meta']}")
+
+
+def main() -> None:
+    from benchmarks import (bench_goffish_vs_vertex, bench_loading,
+                            bench_straggler, bench_supersteps)
+    print("name,us_per_call,derived")
+    bench_goffish_vs_vertex.run()
+    bench_loading.run()
+    bench_supersteps.run()
+    bench_straggler.run()
+    _blockrank()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""PageRank + BlockRank on a social-network-like powerlaw graph (paper §5.3,
+§6.5): classic PageRank gets NO benefit from the sub-graph abstraction — the
+fix is BlockRank, which uses the blocks (sub-graphs) to seed convergence.
+
+    PYTHONPATH=src python examples/pagerank_social.py
+"""
+import numpy as np
+
+from repro.algorithms import blockrank, pagerank
+from repro.core.subgraph import subgraph_sizes
+from repro.gofs import powerlaw_social, subgraph_balanced_partition, hash_partition
+from repro.gofs.formats import partition_graph
+
+
+def main():
+    g = powerlaw_social(5000, m=5, seed=2)
+    pg = partition_graph(g, hash_partition(g, 8, seed=0), 8)
+
+    r_classic, t_classic = pagerank(pg, num_iters=60, tol=1e-7)
+    r_block, t_block, info = blockrank(pg, tol=1e-7, max_iters=60)
+    top = np.argsort(r_classic[pg.vmask])[-3:]
+    print(f"classic PageRank: {t_classic.supersteps} supersteps")
+    print(f"BlockRank seeded: {t_block.supersteps} supersteps "
+          f"({info['num_meta']} blocks)")
+
+    # straggler telemetry (paper Fig 5): sub-graph size skew per partition
+    sizes = subgraph_sizes(pg)
+    biggest = [int(s.max()) if len(s) else 0 for s in sizes]
+    print(f"largest sub-graph per partition (hash): {biggest}")
+    pg_bal = partition_graph(g, subgraph_balanced_partition(g, 8, seed=0), 8)
+    sizes_b = [int(s.max()) if len(s) else 0 for s in subgraph_sizes(pg_bal)]
+    print(f"largest sub-graph per partition (balanced, paper §7 fix): {sizes_b}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""End-to-end LM training driver example: a few hundred steps on synthetic
+data with checkpoint/restart (kill it mid-run and re-run — it resumes).
+
+    PYTHONPATH=src python examples/train_lm.py
+is equivalent to:
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+        --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/repro_ckpt --resume
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "llama3-8b", "--reduced",
+                "--steps", "200", "--batch", "8", "--seq", "64",
+                "--ckpt-dir", "/tmp/repro_ckpt", "--resume"]
+    train.main()

@@ -1,0 +1,9 @@
+"""Paper §5 algorithms, each in sub-graph centric AND vertex centric form."""
+from repro.algorithms.connected_components import connected_components
+from repro.algorithms.sssp import sssp
+from repro.algorithms.pagerank import blockrank, pagerank
+from repro.algorithms.bfs import bfs
+from repro.algorithms.max_vertex import max_vertex
+
+__all__ = ["connected_components", "sssp", "pagerank", "blockrank", "bfs",
+           "max_vertex"]

@@ -1,0 +1,32 @@
+"""Connected Components via HCC label propagation (paper §5.1).
+
+Sub-graph centric: each superstep propagates the largest vertex id through the
+entire sub-graph (local fixpoint), so supersteps = meta-graph diameter + O(1)
+instead of vertex diameter + O(1) — the paper's 554 -> 7 result on RN.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import GopherEngine, SemiringProgram, init_max_vertex
+from repro.gofs.formats import PAD, PartitionedGraph
+
+
+def connected_components(pg: PartitionedGraph, mode: str = "subgraph",
+                         backend: str = "local", mesh=None,
+                         spmv_backend: Optional[str] = None,
+                         max_local_iters: Optional[int] = None):
+    """Returns (labels (P, v_max) int64 — component id = max global vertex id
+    in the component, -1 on pad slots —, num_components, Telemetry)."""
+    prog = SemiringProgram(
+        semiring="max_first", init_fn=init_max_vertex,
+        max_local_iters=(max_local_iters if mode == "subgraph" else 1),
+        spmv_backend=spmv_backend)
+    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh)
+    state, tele = eng.run()
+    x = np.asarray(state["x"])
+    labels = np.where(pg.vmask, x, -1).astype(np.int64)
+    ncc = len(np.unique(labels[pg.vmask]))
+    return labels, ncc, tele

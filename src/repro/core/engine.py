@@ -1,0 +1,266 @@
+"""Gopher: the sub-graph centric BSP execution engine.
+
+Faithful mapping of the paper's §4.2 runtime onto SPMD JAX:
+
+  paper                               here
+  -----                               ----
+  worker per machine                  mesh device along the 'parts' axis
+  thread pool over sub-graphs         vectorized (vmap) partitions + the
+                                      local-fixpoint sweep (programs.py)
+  async TCP message flush             all_to_all mailbox at superstep boundary
+                                      (XLA overlaps it with the sweep tail)
+  manager sync/resume/terminate       psum of per-partition 'changed' flags
+                                      inside a lax.while_loop — the manager
+                                      degenerates to an all-reduce
+  VoteToHalt + no input messages      changed == False (see programs.py for
+                                      why this is equivalent for idempotent ⊕)
+
+Two backends share every line of superstep logic:
+  'local'     — all P partitions as a (P, ...) batch on one device (CPU tests,
+                virtual partitions)
+  'shard_map' — partitions sharded over a mesh axis; mailbox routed with a
+                real all_to_all; halt via psum (multi-chip / dry-run path)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import messages as msg
+from repro.gofs.formats import PAD, PartitionedGraph
+
+_GB_FIELDS = ["nbr", "wgt", "vmask", "out_degree", "global_id", "sg_id",
+              "re_src", "re_wgt", "re_dst_part", "re_dst_local", "re_slot"]
+
+
+@dataclasses.dataclass
+class Telemetry:
+    supersteps: int
+    local_iters: np.ndarray        # (P,) cumulative sweep iterations (straggler signal)
+    changed_hist: np.ndarray       # (max_supersteps,) #partitions changed per superstep
+    messages_sent: int
+
+
+def graph_block(pg: PartitionedGraph, as_spec: bool = False) -> dict:
+    """The device-side pytree of per-partition arrays (leading axis P).
+    ``as_spec=True`` returns ShapeDtypeStructs (dry-run lowering)."""
+    gb = {k: np.asarray(getattr(pg, k)) for k in _GB_FIELDS}
+    gb["part_index"] = np.arange(pg.num_parts, dtype=np.int32)
+    for name, arr in pg.attrs.items():
+        gb[f"attr_{name}"] = np.asarray(arr)
+    if as_spec:
+        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in gb.items()}
+    return {k: jnp.asarray(v) for k, v in gb.items()}
+
+
+class GopherEngine:
+    """Runs a program over a PartitionedGraph to global quiescence."""
+
+    def __init__(self, pg: PartitionedGraph, program, backend: str = "local",
+                 mesh=None, axis_name: str = "parts",
+                 max_supersteps: int = 4096):
+        assert backend in ("local", "shard_map")
+        if backend == "shard_map":
+            assert mesh is not None
+            d = mesh.shape[axis_name]
+            assert pg.num_parts % d == 0, "partitions must tile the mesh axis"
+        self.pg = pg
+        self.program = program
+        self.backend = backend
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.max_supersteps = max_supersteps
+
+    # ---------------- superstep body (backend-shared) ----------------
+    def make_superstep(self, gb):
+        """One BSP superstep over a partition batch gb (leading axis = local
+        partition count). Returns (state, inbox, changed(P,), liters(P,), nsent)."""
+        prog = self.program
+        cap = self.pg.mailbox_cap
+        v_max = self.pg.v_max
+        combine = prog.combine
+        num_parts = self.pg.num_parts
+
+        def sstep(state, inbox, step):
+            new_state, changed, liters = jax.vmap(
+                prog.superstep, in_axes=(0, 0, 0, None))(state, inbox, gb, step)
+            vals, send = jax.vmap(prog.messages)(new_state, gb)
+            ov, oi = jax.vmap(
+                functools.partial(msg.build_outbox, num_parts=num_parts,
+                                  cap=cap, combine=combine))(
+                vals, gb["re_src"], gb["re_dst_part"], gb["re_dst_local"],
+                gb["re_slot"], send)
+            if self.backend == "local":
+                iv, ii = msg.route_local(ov, oi)
+            else:
+                iv, ii = msg.route_shard_map(ov, oi, self.axis_name)
+            inbox = jax.vmap(
+                functools.partial(msg.combine_inbox, v_max=v_max, combine=combine))(iv, ii)
+            nsent = jnp.sum(send).astype(jnp.int32)
+            return new_state, inbox, changed, liters, nsent
+
+        return sstep
+
+    def _run_batched(self, gb):
+        """The full BSP loop over a partition batch. Runs as-is on the local
+        backend; runs per-shard (with collectives) under shard_map."""
+        prog = self.program
+        ident = msg.COMBINE_IDENTITY[prog.combine]
+        sstep = self.make_superstep(gb)
+        p_local = gb["vmask"].shape[0]
+        state0 = jax.vmap(prog.init)(gb)
+        inbox0 = jnp.full((p_local, self.pg.v_max), ident, jnp.float32)
+        tele0 = dict(liters=jnp.zeros((p_local,), jnp.int32),
+                     hist=jnp.zeros((self.max_supersteps,), jnp.int32),
+                     sent=jnp.int32(0))
+
+        def cond(c):
+            _, _, step, done, _ = c
+            return (~done) & (step < self.max_supersteps)
+
+        def body(c):
+            state, inbox, step, _, tele = c
+            state, inbox, changed, liters, nsent = sstep(state, inbox, step)
+            any_changed = jnp.any(changed)
+            nchanged = jnp.sum(changed.astype(jnp.int32))
+            if self.backend == "shard_map":
+                any_changed = jax.lax.psum(any_changed.astype(jnp.int32),
+                                           self.axis_name) > 0
+                nchanged = jax.lax.psum(nchanged, self.axis_name)
+                nsent = jax.lax.psum(nsent, self.axis_name)
+            tele = dict(liters=tele["liters"] + liters,
+                        hist=tele["hist"].at[step].set(nchanged),
+                        sent=tele["sent"] + nsent)
+            return state, inbox, step + 1, ~any_changed, tele
+
+        state, _, steps, _, tele = jax.lax.while_loop(
+            cond, body, (state0, inbox0, jnp.int32(0), jnp.bool_(False), tele0))
+        return state, steps, tele
+
+    # ---------------- drivers ----------------
+    def run(self, checkpointer=None, checkpoint_every: int = 0,
+            resume: bool = False):
+        """Run to quiescence. With a `training.checkpoint.Checkpointer` and
+        checkpoint_every=N, the BSP loop snapshots (state, inbox, superstep)
+        every N supersteps and can restart from the last committed snapshot
+        after a failure (BSP makes the cut trivially consistent — paper §4.2's
+        synchronization points ARE the recovery lines)."""
+        if checkpointer is not None and checkpoint_every > 0:
+            return self._run_checkpointed(checkpointer, checkpoint_every, resume)
+        if self.backend == "local":
+            gb = graph_block(self.pg)
+            state, steps, tele = jax.jit(lambda g: self._run_batched(g))(gb)
+        else:
+            state, steps, tele = self._sharded_fn()(graph_block(self.pg))
+        telemetry = Telemetry(
+            supersteps=int(steps),
+            local_iters=np.asarray(tele["liters"]).reshape(-1),
+            changed_hist=np.asarray(tele["hist"]),
+            messages_sent=int(tele["sent"]) if np.ndim(tele["sent"]) == 0 else int(np.max(tele["sent"])),
+        )
+        return jax.tree.map(np.asarray, state), telemetry
+
+    def _run_checkpointed(self, ck, every: int, resume: bool):
+        """Chunked BSP: jitted inner loop of <= `every` supersteps, snapshot
+        between chunks (local backend)."""
+        assert self.backend == "local", "checkpointed runs use the local backend"
+        gb = graph_block(self.pg)
+        prog = self.program
+        ident = msg.COMBINE_IDENTITY[prog.combine]
+        sstep = self.make_superstep(gb)
+
+        @jax.jit
+        def chunk(state, inbox, step0):
+            def cond(c):
+                _, _, step, done, _ = c
+                return (~done) & (step < step0 + every) & (step < self.max_supersteps)
+
+            def body(c):
+                state, inbox, step, _, liters = c
+                state, inbox, changed, li, _ = sstep(state, inbox, step)
+                return state, inbox, step + 1, ~jnp.any(changed), liters + li
+
+            return jax.lax.while_loop(
+                cond, body, (state, inbox, step0, jnp.bool_(False),
+                             jnp.zeros((self.pg.num_parts,), jnp.int32)))
+
+        if resume and ck.latest_step() is not None:
+            snap_like = {
+                "state": jax.eval_shape(lambda g: jax.vmap(prog.init)(g), gb),
+                "inbox": jax.ShapeDtypeStruct(
+                    (self.pg.num_parts, self.pg.v_max), np.float32),
+            }
+            snap, step = ck.restore(snap_like)
+            state, inbox = snap["state"], snap["inbox"]
+            step = jnp.int32(step)
+        else:
+            state = jax.vmap(prog.init)(gb)
+            inbox = jnp.full((self.pg.num_parts, self.pg.v_max), ident, jnp.float32)
+            step = jnp.int32(0)
+
+        total_liters = np.zeros((self.pg.num_parts,), np.int64)
+        done = False
+        while not done and int(step) < self.max_supersteps:
+            state, inbox, step, done_flag, liters = chunk(state, inbox, step)
+            total_liters += np.asarray(liters)
+            done = bool(done_flag)
+            ck.save({"state": state, "inbox": inbox}, int(step))
+        tele = Telemetry(supersteps=int(step), local_iters=total_liters,
+                         changed_hist=np.zeros(0, np.int32), messages_sent=-1)
+        return jax.tree.map(np.asarray, state), tele
+
+    def _sharded_fn(self):
+        spec = P(self.axis_name)
+        rep = P()
+
+        def body(gb_shard):
+            state, steps, tele = self._run_batched(gb_shard)
+            return state, steps, tele
+
+        gb_spec = jax.tree.map(lambda _: spec,
+                               graph_block(self.pg, as_spec=True))
+        # state leaves shard over parts; steps + hist + sent are replicated;
+        # liters shard over parts.
+        state_spec = jax.tree.map(lambda _: spec,
+                                  jax.eval_shape(lambda g: jax.vmap(self.program.init)(g),
+                                                 graph_block(self.pg, as_spec=True)))
+        out_specs = (state_spec, rep,
+                     dict(liters=spec, hist=rep, sent=rep))
+        f = jax.shard_map(body, mesh=self.mesh, in_specs=(gb_spec,),
+                          out_specs=out_specs, check_vma=False)
+        return jax.jit(f)
+
+    # ---------------- lowering entry point (dry-run / roofline) ----------------
+    def lowerable_superstep(self):
+        """A (fn, example_specs) pair: one shard_map'd BSP superstep suitable
+        for ``jax.jit(fn).lower(*specs).compile()`` at production mesh scale.
+        Used by launch/dryrun.py for the paper-side roofline."""
+        assert self.backend == "shard_map"
+        spec = P(self.axis_name)
+        gb_specs = graph_block(self.pg, as_spec=True)
+        gb_pspec = jax.tree.map(lambda _: spec, gb_specs)
+        prog = self.program
+        ident = msg.COMBINE_IDENTITY[prog.combine]
+
+        state_shapes = jax.eval_shape(
+            lambda g: jax.vmap(prog.init)(g), gb_specs)
+        state_pspec = jax.tree.map(lambda _: spec, state_shapes)
+        inbox_spec = jax.ShapeDtypeStruct((self.pg.num_parts, self.pg.v_max), np.float32)
+
+        def one_step(gb, state, inbox, step):
+            sstep = self.make_superstep(gb)
+            st, ib, ch, li, ns = sstep(state, inbox, step)
+            return st, ib, ch
+
+        f = jax.shard_map(one_step, mesh=self.mesh,
+                          in_specs=(gb_pspec, state_pspec, spec, P()),
+                          out_specs=(state_pspec, spec, spec),
+                          check_vma=False)
+        step_spec = jax.ShapeDtypeStruct((), np.int32)
+        return f, (gb_specs, state_shapes, inbox_spec, step_spec)

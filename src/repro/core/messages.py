@@ -1,0 +1,94 @@
+"""Mailbox message routing — the superstep-boundary exchange.
+
+The paper's Gopher workers aggregate messages per destination host and ship
+them over TCP while compute proceeds. The TPU-native analogue is a fixed
+capacity mailbox tensor routed with a single ``all_to_all`` per superstep
+(or a transpose on the single-device/local backend), then a segment-combine
+into each partition's inbox. Capacity = max messages between any partition
+pair, precomputed by GoFS at build time — padding slots carry the combine
+identity so they are no-ops.
+
+These same primitives back the MoE token-dispatch in repro.models (the
+framework's mailbox IS the expert all_to_all), per DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.gofs.formats import PAD
+
+COMBINE_IDENTITY = {"min": jnp.inf, "max": -jnp.inf, "sum": 0.0}
+_SEGMENT = {
+    "min": jax.ops.segment_min,
+    "max": jax.ops.segment_max,
+    "sum": jax.ops.segment_sum,
+}
+
+
+def build_outbox(vals: jnp.ndarray, re_src: jnp.ndarray, re_dst_part: jnp.ndarray,
+                 re_dst_local: jnp.ndarray, re_slot: jnp.ndarray, send_mask: jnp.ndarray,
+                 num_parts: int, cap: int, combine: str
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter per-remote-edge values into the (P_dst, cap) outbox of ONE
+    source partition.
+
+    vals: (r_max,) message value per remote edge (already ⊗-combined with the
+    edge weight by the program). send_mask masks out pad slots / unchanged
+    sources. Returns (out_vals, out_idx) of shape (num_parts, cap).
+    """
+    ident = COMBINE_IDENTITY[combine]
+    valid = (re_src != PAD) & send_mask
+    dst_p = jnp.where(valid, re_dst_part, 0)
+    slot = jnp.where(valid, re_slot, 0)
+    flat = dst_p * cap + slot
+    flat = jnp.where(valid, flat, num_parts * cap)  # OOB -> dropped
+    out_vals = jnp.full((num_parts * cap,), ident, vals.dtype)
+    out_idx = jnp.full((num_parts * cap,), PAD, jnp.int32)
+    out_vals = out_vals.at[flat].set(jnp.where(valid, vals, ident), mode="drop")
+    out_idx = out_idx.at[flat].set(jnp.where(valid, re_dst_local, PAD), mode="drop")
+    return out_vals.reshape(num_parts, cap), out_idx.reshape(num_parts, cap)
+
+
+def combine_inbox(in_vals: jnp.ndarray, in_idx: jnp.ndarray, v_max: int,
+                  combine: str) -> jnp.ndarray:
+    """Segment-⊕ received messages into a dense (v_max,) inbox.
+
+    in_vals/in_idx: (num_src, cap) from all source partitions. PAD indices map
+    out-of-range and are dropped by the scatter.
+    """
+    ident = COMBINE_IDENTITY[combine]
+    idx = in_idx.reshape(-1)
+    idx = jnp.where(idx == PAD, v_max, idx).astype(jnp.int32)
+    seg = _SEGMENT[combine](in_vals.reshape(-1), idx, num_segments=v_max + 1)
+    inbox = seg[:v_max]
+    if combine in ("min", "max"):
+        return inbox
+    return inbox  # sum: empty segments are already 0
+
+
+def route_local(outbox_vals: jnp.ndarray, outbox_idx: jnp.ndarray):
+    """Local backend: outbox (P_src, P_dst, cap) -> inbox-side (P_dst, P_src, cap).
+    A transpose IS the all_to_all when every partition lives on one device."""
+    return outbox_vals.transpose(1, 0, 2), outbox_idx.transpose(1, 0, 2)
+
+
+def route_shard_map(outbox_vals: jnp.ndarray, outbox_idx: jnp.ndarray,
+                    axis_name: str):
+    """shard_map backend: per-device block is (v_local_src, P, cap) where
+    P = D * v_local. Rearranged so ``all_to_all`` over the device axis delivers
+    each device-pair payload, then reassembled as (v_local_dst, P_src, cap)."""
+    v, P, cap = outbox_vals.shape
+    D = P // v
+
+    def _route(x):
+        # (v_src, D*v_dst, cap) -> (D, v_src, v_dst, cap) -> a2a -> received
+        x = x.reshape(v, D, v, cap).transpose(1, 0, 2, 3)
+        x = jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        # now x[d_src, v_src, v_dst, cap] on each destination device
+        return x.reshape(D, v, v, cap).transpose(2, 0, 1, 3).reshape(v, D * v, cap)
+
+    return _route(outbox_vals), _route(outbox_idx)

@@ -1,0 +1,166 @@
+"""Sub-graph centric programs — the user-facing Compute abstraction.
+
+The paper's ``Compute(Subgraph, Iterator<Message>)`` runs an arbitrary
+shared-memory algorithm over the sub-graph per superstep. The TPU-idiomatic
+equivalent is a *local-fixpoint sweep*: a vectorized semiring relaxation
+iterated until the partition's state quiesces (information provably cannot
+cross sub-graph boundaries through local edges, so the fixpoint IS the
+"traverse the whole sub-graph in one superstep" semantics of §3.2).
+
+``max_local_iters`` selects the execution model:
+    None -> run to local fixpoint  (sub-graph centric, Gopher)
+    1    -> one sweep per superstep (vertex centric, the Giraph baseline)
+    k    -> bounded local work      (beyond-paper straggler mitigation)
+
+Programs expose:
+    init(gb)                -> state pytree of (v_max,) leaves
+    superstep(state, inbox, gb, step) -> (state, changed_scalar, local_iters)
+    messages(state, gb)     -> (vals (r_max,), send_mask (r_max,))
+    combine                 -> inbox ⊕: 'min' | 'max' | 'sum'
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.gofs.formats import PAD
+from repro.kernels import ops
+
+
+def _ew_combine(combine: str, a, b):
+    return jnp.minimum(a, b) if combine == "min" else jnp.maximum(a, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class SemiringProgram:
+    """Idempotent-semiring fixpoint programs: CC, SSSP, BFS, MaxVertex."""
+    semiring: str                       # min_plus | max_first
+    init_fn: Callable                   # gb -> x0 (v_max,)
+    max_local_iters: Optional[int] = None
+    spmv_backend: Optional[str] = None
+    fixpoint_unroll: int = 1            # sweeps fused per loop iteration (perf knob)
+
+    @property
+    def combine(self) -> str:
+        return "min" if self.semiring == "min_plus" else "max"
+
+    def init(self, gb) -> dict:
+        x0 = self.init_fn(gb)
+        return {"x": x0, "changed_v": gb["vmask"]}
+
+    def _sweep(self, x, gb):
+        y = ops.semiring_spmv(x, gb["nbr"], gb["wgt"], self.semiring,
+                              backend=self.spmv_backend)
+        return _ew_combine(self.combine, x, y)
+
+    def superstep(self, state, inbox, gb, step):
+        x0 = state["x"]
+        vmask = gb["vmask"]
+        x = _ew_combine(self.combine, x0, inbox)
+        max_it = self.max_local_iters
+        if max_it == 1:
+            x2 = self._sweep(x, gb)
+            iters = jnp.int32(1)
+        else:
+            cap = jnp.int32(max_it if max_it is not None else 2**30)
+
+            def cond(c):
+                _, ch, it = c
+                return ch & (it < cap)
+
+            def body(c):
+                xc, _, it = c
+                y = xc
+                for _ in range(self.fixpoint_unroll):
+                    y = self._sweep(y, gb)
+                ch = jnp.any((y != xc) & vmask)
+                return y, ch, it + self.fixpoint_unroll
+
+            x2, _, iters = jax.lax.while_loop(cond, body, (x, jnp.bool_(True), jnp.int32(0)))
+        changed_v = (x2 != x0) & vmask
+        # superstep 1: everything counts as changed so initial messages flow
+        changed_v = jnp.where(step == 0, vmask, changed_v)
+        changed = jnp.any(changed_v)
+        return {"x": x2, "changed_v": changed_v}, changed, iters
+
+    def messages(self, state, gb):
+        src = gb["re_src"]
+        valid = src != PAD
+        safe = jnp.where(valid, src, 0)
+        xv = state["x"][safe]
+        vals = xv + gb["re_wgt"] if self.semiring == "min_plus" else xv
+        send = valid & state["changed_v"][safe]
+        return vals, send
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRankProgram:
+    """Classic PageRank (paper §5.3): one Jacobi iteration per superstep,
+    fixed ``num_iters`` supersteps (the paper runs 30), pull formulation.
+    Remote in-edges deliver contributions through the mailbox (⊕ = sum)."""
+    n_global: int
+    num_iters: int = 30
+    damping: float = 0.85
+    tol: Optional[float] = None         # if set, halt early on L1 delta (BlockRank phase 3)
+    spmv_backend: Optional[str] = None
+    init_fn: Optional[Callable] = None  # gb -> r0 (BlockRank seeds phase 3 with this)
+
+    combine = "sum"
+
+    def init(self, gb) -> dict:
+        vmask = gb["vmask"]
+        if self.init_fn is not None:
+            r0 = jnp.where(vmask, self.init_fn(gb), 0.0)
+        else:
+            r0 = jnp.where(vmask, 1.0 / self.n_global, 0.0)
+        return {"r": r0, "delta": jnp.float32(jnp.inf)}
+
+    def _contrib(self, r, gb):
+        deg = gb["out_degree"].astype(jnp.float32)
+        return jnp.where(deg > 0, r / jnp.maximum(deg, 1.0), 0.0)
+
+    def superstep(self, state, inbox, gb, step):
+        vmask = gb["vmask"]
+        r = state["r"]
+        ones = jnp.ones_like(gb["wgt"])
+        pull = ops.semiring_spmv(self._contrib(r, gb), gb["nbr"], ones,
+                                 "plus_times", backend=self.spmv_backend)
+        r_new = jnp.where(
+            vmask, (1.0 - self.damping) / self.n_global + self.damping * (pull + inbox), 0.0)
+        delta = jnp.sum(jnp.abs(r_new - r))
+        if self.tol is not None:
+            changed = (delta > self.tol) & (step + 1 < self.num_iters)
+        else:
+            changed = step + 1 < self.num_iters
+        return {"r": r_new, "delta": delta}, changed, jnp.int32(1)
+
+    def messages(self, state, gb):
+        src = gb["re_src"]
+        valid = src != PAD
+        safe = jnp.where(valid, src, 0)
+        vals = self._contrib(state["r"], gb)[safe]
+        return vals, valid
+
+
+# ---------------- init helpers ----------------
+
+def init_max_vertex(gb):
+    """MaxVertex / CC seed: each vertex starts at its own global id (paper's
+    HCC: propagate the largest vertex id)."""
+    return jnp.where(gb["vmask"], gb["global_id"].astype(jnp.float32), -jnp.inf)
+
+
+def make_sssp_init(source_part: int, source_local: int):
+    def init(gb):
+        x = jnp.where(gb["vmask"], jnp.inf, jnp.inf)
+        is_here = gb["part_index"] == source_part
+        x = x.at[source_local].set(jnp.where(is_here, 0.0, jnp.inf))
+        return x
+    return init
+
+
+def make_bfs_init(source_part: int, source_local: int):
+    return make_sssp_init(source_part, source_local)  # BFS = SSSP with unit wgt

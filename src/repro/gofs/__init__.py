@@ -1,0 +1,18 @@
+"""GoFS: Graph-oriented File System — distributed, sub-graph aware graph store.
+
+Co-designed with the Gopher engine (repro.core): the on-disk layout is one
+slice-bundle per partition (topology slice + attribute slices), so a worker
+loads exactly its partition with zero network movement, mirroring the paper's
+GoFS design (write-once / read-many, per-attribute lazy slices).
+"""
+from repro.gofs.formats import Graph, PartitionedGraph, ell_from_csr
+from repro.gofs.generators import road_grid, powerlaw_social, trace_star
+from repro.gofs.partition import hash_partition, bfs_grow_partition, subgraph_balanced_partition
+from repro.gofs.store import GoFSStore
+
+__all__ = [
+    "Graph", "PartitionedGraph", "ell_from_csr",
+    "road_grid", "powerlaw_social", "trace_star",
+    "hash_partition", "bfs_grow_partition", "subgraph_balanced_partition",
+    "GoFSStore",
+]

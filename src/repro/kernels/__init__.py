@@ -1,0 +1,11 @@
+"""Pallas TPU kernels: the sub-graph semiring sweep (paper hot-spot) and the
+fused flash attention (LM-substrate hot-spot), each with jnp oracles."""
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mamba_scan import mamba1_scan_pallas, mamba1_scan_ref
+from repro.kernels.ops import bin_rows_by_degree, multibin_spmv, semiring_spmv
+from repro.kernels.ref import semiring_spmv_ref
+from repro.kernels.semiring_spmv import semiring_spmv_pallas
+
+__all__ = ["semiring_spmv", "semiring_spmv_ref", "semiring_spmv_pallas",
+           "bin_rows_by_degree", "multibin_spmv", "flash_attention_pallas",
+           "mamba1_scan_pallas", "mamba1_scan_ref"]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the Pallas kernels are validated against
+(interpret=True on CPU), and they double as the fast XLA:CPU execution path
+for the engine when no TPU is present — same math, fusion left to XLA.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.gofs.formats import PAD
+
+SEMIRINGS = ("min_plus", "max_first", "plus_times")
+
+
+def semiring_spmv_ref(x: jnp.ndarray, nbr: jnp.ndarray, wgt: jnp.ndarray,
+                      semiring: str) -> jnp.ndarray:
+    """ELL semiring sweep: y[v] = ⊕_j ( x[nbr[v,j]] ⊗ wgt[v,j] ).
+
+    x: (V,) float32; nbr: (V, D) int32 with PAD fill; wgt: (V, D) float32.
+    Semirings: min_plus (SSSP), max_first (CC/MaxVertex — ⊗ ignores wgt),
+    plus_times (PageRank).
+    """
+    valid = nbr != PAD
+    safe = jnp.where(valid, nbr, 0)
+    g = x[safe]  # (V, D)
+    if semiring == "min_plus":
+        t = jnp.where(valid, g + wgt, jnp.inf)
+        return jnp.min(t, axis=1)
+    if semiring == "max_first":
+        t = jnp.where(valid, g, -jnp.inf)
+        return jnp.max(t, axis=1)
+    if semiring == "plus_times":
+        t = jnp.where(valid, g * wgt, 0.0)
+        return jnp.sum(t, axis=1)
+    raise ValueError(f"unknown semiring {semiring}")

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.launch import roofline as R
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models.sharding import clear_rules, set_rules
+from repro.training import optimizer as O
+from repro.training.shardspec import batch_pspecs, cache_pspecs, param_pspecs, state_pspecs
+from repro.training.train_step import make_decode_step, make_prefill_step, make_train_step
+
+
+def _drop_batch_axes(spec):
+    """Replicate batch-sharded dims (long_500k batch=1 can't shard batch)."""
+    from jax.sharding import PartitionSpec as P
+    ents = []
+    for ax in spec:
+        if ax is None:
+            ents.append(None)
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        axs = tuple(x for x in axs if x not in ("pod", "data"))
+        ents.append(axs if len(axs) > 1 else (axs[0] if axs else None))
+    return P(*ents)
+
+
+def lower_cell(cfg, cell, mesh, opt_cfg=None, donate=True, accum_steps=1):
+    """Lower + compile one cell on `mesh`. Returns (compiled, lowered)."""
+    from jax.sharding import PartitionSpec as P
+    opt_cfg = opt_cfg or O.OptCfg()
+    set_rules(mesh)
+    jax.set_mesh(mesh)
+    kind, args = input_specs(cfg, cell, opt_cfg)
+    axis_names = mesh.axis_names
+    if kind == "train":
+        state, batch = args
+        fn = make_train_step(cfg, opt_cfg, accum_steps=accum_steps)
+        in_sh = (state_pspecs(state, mesh), batch_pspecs(batch, mesh))
+        jfn = jax.jit(fn, in_shardings=in_sh,
+                      donate_argnums=(0,) if donate else ())
+    elif kind == "prefill":
+        params, batch = args
+        fn = make_prefill_step(cfg, max_seq=cell["seq"])
+        in_sh = (param_pspecs(params, mesh), batch_pspecs(batch, mesh))
+        jfn = jax.jit(fn, in_shardings=in_sh)
+    else:  # decode
+        params, token, cache = args
+        fn = make_decode_step(cfg)
+        baxes = tuple(a for a in ("pod", "data") if a in axis_names)
+        b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+        n_batch_devs = 1
+        for a in baxes:
+            n_batch_devs *= mesh.shape[a]
+        cache_sh = cache_pspecs(cache, mesh)
+        tok_sh = P(b) if not cfg.embed_inputs else P(b, None)
+        if cell["batch"] < n_batch_devs:  # long_500k batch=1: replicate batch
+            tok_sh = P() if not cfg.embed_inputs else P(None, None)
+            cache_sh = jax.tree.map(_drop_batch_axes, cache_sh,
+                                    is_leaf=lambda x: isinstance(x, P))
+        in_sh = (param_pspecs(params, mesh), tok_sh, cache_sh)
+        jfn = jax.jit(fn, in_shardings=in_sh,
+                      donate_argnums=(2,) if donate else ())
+    lowered = jfn.lower(*args)
+    compiled = lowered.compile()
+    return compiled, lowered
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, opt_cfg=None,
+             verbose: bool = True, accum_steps: int = 1):
+    cfg = get_config(arch)
+    cell = cfg.shapes()[shape]
+    if cell is None:
+        return dict(arch=arch, shape=shape, skipped=True,
+                    reason="long_500k needs sub-quadratic attention "
+                           "(DESIGN.md §Arch-applicability)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    compiled, lowered = lower_cell(cfg, cell, mesh, opt_cfg,
+                                   accum_steps=accum_steps)
+    dt = time.time() - t0
+    rf = R.analyze(compiled, cfg, cell, arch, shape, mesh_name, chips)
+    out = rf.to_dict()
+    out.update(compile_seconds=dt, skipped=False)
+    if verbose:
+        mem = out["mem_stats"] or {}
+        print(f"[{arch} × {shape} × {mesh_name}] compiled in {dt:.1f}s")
+        print(f"  memory/device: args={mem.get('argument', 0)/2**30:.2f}GiB "
+              f"temp={mem.get('temp', 0)/2**30:.2f}GiB")
+        print(f"  flops/dev={out['flops_per_device']:.3e} "
+              f"bytes/dev={out['bytes_per_device']:.3e} "
+              f"coll/dev={out['coll_bytes_per_device']:.3e}")
+        print(f"  t_comp={out['t_compute']*1e3:.2f}ms t_mem={out['t_memory']*1e3:.2f}ms "
+              f"t_coll={out['t_collective']*1e3:.2f}ms -> {out['bottleneck']}"
+              f"  useful={out['useful_flops_ratio']:.2f} "
+              f"roofline={out['roofline_fraction']:.2f}")
+    return out
+
+
+def graph_dryrun(multi_pod: bool = False, n_vertices: int = 262_144,
+                 verbose: bool = True):
+    """Lower + compile one Gopher BSP superstep at production scale: one
+    partition per chip (256 or 512), synthetic road-grid graph, CC program.
+    The paper-side §Dry-run / §Roofline artifact."""
+    import numpy as np
+    from repro.core import GopherEngine, SemiringProgram, init_max_vertex
+    from repro.gofs import road_grid, bfs_grow_partition
+    from repro.gofs.formats import partition_graph
+    from repro.launch import hloparse
+    from repro.launch.mesh import make_mesh
+
+    chips = 512 if multi_pod else 256
+    side = int(np.sqrt(n_vertices))
+    g = road_grid(side, side, drop_frac=0.03, seed=0)
+    assign = bfs_grow_partition(g, chips, seed=0)
+    pg = partition_graph(g, assign, chips, lane_pad=8)
+    mesh = make_mesh((chips,), ("parts",))
+    prog = SemiringProgram(semiring="max_first", init_fn=init_max_vertex,
+                           spmv_backend="jnp")
+    eng = GopherEngine(pg, prog, backend="shard_map", mesh=mesh)
+    fn, specs = eng.lowerable_superstep()
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    from repro.launch import hloparse as hp
+    parsed = hp.analyze_text(compiled.as_text())
+    mem = compiled.memory_analysis()
+    sweeps_per_superstep = 4  # representative local-fixpoint depth (road grid)
+    local_edges = int((pg.nbr != -1).sum())
+    model_flops = 2.0 * local_edges * sweeps_per_superstep  # ⊕+⊗ per edge
+    out = dict(
+        arch="goffish-graph-engine", shape=f"cc_superstep_{n_vertices}v",
+        mesh="2x16x16" if multi_pod else "16x16", chips=chips,
+        flops_per_device=parsed["flops"], hbm_bytes_per_device=parsed["hbm"],
+        coll_bytes_per_device=parsed["coll_bytes_total"],
+        coll_detail={"bytes": parsed["coll"], "counts": parsed["coll_counts"]},
+        model_flops_total=model_flops,
+        graph=pg.stats(), compile_seconds=dt, skipped=False,
+        mem_stats=dict(argument=getattr(mem, "argument_size_in_bytes", 0),
+                       temp=getattr(mem, "temp_size_in_bytes", 0)) if mem else None,
+    )
+    if verbose:
+        cnts = {k: int(v) for k, v in parsed["coll_counts"].items() if v}
+        print(f"[graph-engine × {out['shape']} × {out['mesh']}] "
+              f"compiled in {dt:.1f}s")
+        print(f"  hbm/dev={parsed['hbm']:.3e}B coll/dev="
+              f"{parsed['coll_bytes_total']:.3e}B ({cnts})")
+        print(f"  graph: v_max={pg.v_max} d_max={pg.d_max} cap={pg.mailbox_cap} "
+              f"cut={pg.edge_cut()}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--graph", action="store_true",
+                    help="dry-run the Gopher graph engine instead of LM cells")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.graph:
+        results = []
+        for mp in ([False, True] if args.both_meshes else [args.multi_pod]):
+            results.append(graph_dryrun(multi_pod=mp))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+        return
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        shapes = (list(ARCHS[a].shapes()) if (args.all or not args.shape)
+                  else [args.shape])
+        for s in shapes:
+            cells.append((a, s))
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    results = []
+    failures = 0
+    for mp in meshes:
+        for a, s in cells:
+            try:
+                results.append(run_cell(a, s, mp, accum_steps=args.accum))
+            except Exception as e:
+                failures += 1
+                traceback.print_exc()
+                results.append(dict(arch=a, shape=s,
+                                    mesh="2x16x16" if mp else "16x16",
+                                    error=f"{type(e).__name__}: {e}"))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out} ({len(results)} cells, {failures} failures)")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Elastic scaling: re-derive the mesh from surviving chip count and restart
+from the last committed checkpoint.
+
+Policy: keep TP ('model') fixed at the per-arch value (it is matched to head /
+expert divisibility), shrink/grow DP ('data'); the pod axis absorbs whole-pod
+losses. Partitions-per-device for the graph engine re-balance because the
+GoFS partition count is decoupled from the device count (virtual partitions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    def make(self):
+        devs = jax.devices()
+        n = 1
+        for s in self.shape:
+            n *= s
+        return jax.make_mesh(
+            self.shape, self.axes, devices=devs[:n],
+            axis_types=(jax.sharding.AxisType.Auto,) * len(self.shape))
+
+
+def plan_mesh(n_chips: int, model_parallel: int = 16,
+              pods: int = 1) -> MeshPlan:
+    """Largest (pod, data, model) mesh that fits n_chips with fixed TP."""
+    per_pod = n_chips // pods
+    data = max(per_pod // model_parallel, 1)
+    if pods > 1:
+        return MeshPlan((pods, data, model_parallel), ("pod", "data", "model"))
+    return MeshPlan((data, model_parallel), ("data", "model"))
+
+
+def shrink_after_failure(old: MeshPlan, lost_chips: int) -> MeshPlan:
+    """Drop whole DP rows to cover the loss — TP groups stay intact, so
+    parameter shards remain co-resident and restore is a pure re-shard."""
+    shape = dict(zip(old.axes, old.shape))
+    model = shape.get("model", 1)
+    pods = shape.get("pod", 1)
+    total = 1
+    for s in old.shape:
+        total *= s
+    survivors = total - lost_chips
+    rows_needed = -(-lost_chips // (model))
+    data = shape.get("data", 1) - rows_needed
+    if data < 1:
+        # fall back to fewer pods
+        pods = max(pods - 1, 1)
+        data = max(survivors // (pods * model), 1)
+    if pods > 1:
+        return MeshPlan((pods, data, model), ("pod", "data", "model"))
+    return MeshPlan((data, model), ("data", "model"))
+
+
+def restart(checkpointer, state_like, plan: MeshPlan, pspecs):
+    """Re-shard the last committed checkpoint onto the new mesh."""
+    from repro.training.shardspec import named
+    mesh = plan.make()
+    shardings = named(mesh, pspecs)
+    state, step = checkpointer.restore(state_like, shardings=shardings)
+    return mesh, state, step

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_mesh(shape, axes):
+    """General helper (tests, elastic restarts, graph-engine meshes)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=jax.devices()[:n],
+                         axis_types=(AxisType.Auto,) * len(shape))

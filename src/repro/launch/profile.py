@@ -1,0 +1,121 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Dry-run profiler: rank the HBM-traffic and collective hotspots of a cell's
+compiled HLO, with while-trip multipliers (the §Perf iteration workflow).
+
+    PYTHONPATH=src python -m repro.launch.profile --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--top 20]
+"""
+import argparse
+import re
+
+import jax
+
+
+def walk_multipliers(analyzer):
+    """comp name -> (multiplier, reached_via_fusion)."""
+    mults = {}
+
+    def walk(name, mult, via_fusion):
+        key = name
+        prev = mults.get(key)
+        if prev is not None and prev[0] >= mult:
+            return
+        mults[key] = (mult, via_fusion)
+        comp = analyzer.comps[name]
+        for op in comp.ops.values():
+            subs, m2, sub_fus = [], mult, via_fusion
+            if op.opcode == "while":
+                mc = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                mb = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if mb:
+                    subs = [mb.group(1)]
+                m2 = mult * (analyzer.trip_count(mc.group(1)) if mc else 1)
+            elif op.opcode in ("fusion", "call", "conditional"):
+                subs = analyzer._called(op)
+                sub_fus = via_fusion or (op.opcode == "fusion")
+            for s in subs:
+                if s in analyzer.comps:
+                    walk(s, m2, sub_fus)
+
+    walk(analyzer.entry, 1, False)
+    return mults
+
+
+def hotspots(compiled, top: int = 20):
+    from repro.launch import hloparse
+    a = hloparse.Analyzer(compiled.as_text())
+    mults = walk_multipliers(a)
+    hbm_rows, coll_rows = [], []
+    for cname, comp in a.comps.items():
+        entry = mults.get(cname)
+        if entry is None:
+            continue
+        mult, via_fusion = entry
+        for op in comp.ops.values():
+            oc = op.opcode
+            base = oc.split("-start")[0].split("-done")[0]
+            if base in hloparse._COLLECTIVES and not oc.endswith("-start"):
+                coll_rows.append((op.result_bytes * mult, base,
+                                  op.result_bytes, mult, op.type_str[:60],
+                                  cname[:32]))
+            if via_fusion:
+                continue  # interior of a fusion: not an HBM boundary
+            if oc in hloparse._FREE_OPS or oc in ("while", "call", "conditional"):
+                continue
+            if oc in ("dynamic-slice", "gather"):
+                b = 2 * op.result_bytes
+            elif oc == "dynamic-update-slice":
+                upd = comp.ops.get(op.operands[1]) if len(op.operands) > 1 else None
+                b = 2 * (upd.result_bytes if upd else op.result_bytes)
+            elif oc == "fusion":
+                subs = a._called(op)
+                w = a._dus_write_bytes(subs[0]) if subs else None
+                reads = a._fusion_operand_reads(op, comp)
+                if w is not None:
+                    big = max((comp.ops[o].result_bytes for o in op.operands
+                               if o in comp.ops), default=0)
+                    b = 2 * w + max(reads - big, 0)
+                else:
+                    b = op.result_bytes + reads
+            else:
+                b = op.result_bytes + sum(
+                    comp.ops[o].result_bytes for o in op.operands
+                    if o in comp.ops and comp.ops[o].opcode != "constant")
+            hbm_rows.append((b * mult, oc, b, mult, op.type_str[:60], cname[:32]))
+    hbm_rows.sort(reverse=True)
+    coll_rows.sort(reverse=True)
+    return hbm_rows[:top], coll_rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(args.arch)
+    cell = cfg.shapes()[args.shape]
+    if cell is None:
+        print("cell skipped (see DESIGN.md §Arch-applicability)")
+        return
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    compiled, _ = lower_cell(cfg, cell, mesh)
+    hbm, coll = hotspots(compiled, args.top)
+    print(f"== top HBM traffic (per device) — {args.arch} × {args.shape} ==")
+    for t, oc, b, m, ty, cn in hbm:
+        print(f"  {t/1e9:9.2f} GB  {oc:22s} {b/1e6:9.1f} MB x{m:<6d} {ty}  [{cn}]")
+    print("== top collectives (per device) ==")
+    for t, base, b, m, ty, cn in coll:
+        print(f"  {t/1e9:9.2f} GB  {base:22s} {b/1e6:9.1f} MB x{m:<6d} {ty}  [{cn}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), in SECONDS per step on TPU v5e:
+    compute    = HLO_FLOPs_total      / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes_total      / (chips × 819e9  B/s HBM)
+    collective = collective_bytes     / (chips × 2 links × 50e9 B/s ICI)
+
+cost_analysis() on a partitioned executable reports PER-DEVICE numbers —
+totals are per-device × chips, so the per-chip seconds are just per-device /
+peak. collective_bytes is parsed out of the compiled HLO text: the summed
+result sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per device, one execution each).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+ICI_LINKS = 2                # effective concurrent links per chip (2D torus dir pairs)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by each collective kind (result-size proxy)."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        if "-start" in line:  # avoid double counting start/done pairs
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+        counts[m.group(2)] += 1
+    return {"bytes": out, "counts": counts}
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_detail: dict
+    model_flops_total: float
+    mem_stats: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / (ICI_LINKS * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.flops_per_device * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term step time that is useful compute:
+        (MODEL_FLOPS / chips / peak) / max(term). The score axis."""
+        t_star = self.model_flops_total / self.chips / PEAK_FLOPS
+        t_dom = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_star / t_dom if t_dom else 0.0
+
+    def to_dict(self) -> dict:
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh, chips=self.chips,
+            flops_per_device=self.flops_per_device,
+            bytes_per_device=self.bytes_per_device,
+            coll_bytes_per_device=self.coll_bytes_per_device,
+            coll_detail=self.coll_detail,
+            model_flops_total=self.model_flops_total,
+            t_compute=self.t_compute, t_memory=self.t_memory,
+            t_collective=self.t_collective, bottleneck=self.bottleneck,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+            mem_stats=self.mem_stats,
+        )
+
+
+def model_flops(cfg, cell: dict) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D forward-only (MoE: N_active)."""
+    n = cfg.active_param_count()
+    kind, seq, batch = cell["kind"], cell["seq"], cell["batch"]
+    if kind == "train":
+        return 6.0 * n * seq * batch
+    if kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch  # decode: one token per sequence
+
+
+def analyze(compiled, cfg, cell: dict, arch: str, shape: str, mesh_name: str,
+            chips: int) -> Roofline:
+    """Scan-aware HLO-text analysis (launch.hloparse) — XLA's own
+    cost_analysis counts lax.scan bodies once, so we parse the partitioned
+    module with while-trip multipliers; raw XLA numbers kept for reference."""
+    from repro.launch import hloparse
+    parsed = hloparse.analyze_text(compiled.as_text())
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_stats = None
+    if mem is not None:
+        mem_stats = dict(
+            argument=getattr(mem, "argument_size_in_bytes", 0),
+            output=getattr(mem, "output_size_in_bytes", 0),
+            temp=getattr(mem, "temp_size_in_bytes", 0),
+            alias=getattr(mem, "alias_size_in_bytes", 0),
+        )
+    coll_detail = {"bytes": parsed["coll"], "counts": parsed["coll_counts"],
+                   "xla_flops_scan_once": float(cost.get("flops", 0.0)),
+                   "xla_bytes_scan_once": float(cost.get("bytes accessed", 0.0))}
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=float(parsed["flops"]),
+        bytes_per_device=float(parsed["hbm"]),
+        coll_bytes_per_device=float(parsed["coll_bytes_total"]),
+        coll_detail=coll_detail,
+        model_flops_total=model_flops(cfg, cell),
+        mem_stats=mem_stats,
+    )

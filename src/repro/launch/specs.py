@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input — no device allocation.
+
+``input_specs(cfg, cell)`` returns the abstract arguments for the function the
+cell lowers: train_step (train), prefill_step (prefill), decode_step (decode).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.training import optimizer as O
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg, seq: int, batch: int, with_labels: bool = True) -> dict:
+    if cfg.embed_inputs:
+        specs = {"inputs": S((batch, seq, cfg.d_model), np.float32)}
+    else:
+        specs = {"inputs": S((batch, seq), np.int32)}
+    if with_labels:
+        specs["labels"] = S((batch, seq), np.int32)
+    if cfg.mrope:
+        specs["positions"] = S((3, batch, seq), np.int32)
+    if cfg.family == "encdec":
+        specs["frames"] = S((batch, cfg.enc_seq, cfg.d_model), np.float32)
+    return specs
+
+
+def state_specs(cfg, opt_cfg: O.OptCfg, max_seq: int = 4096):
+    """Abstract train state via eval_shape — params never materialize."""
+    def build():
+        params = M.init_params(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+        return O.init_state(params, opt_cfg)
+    return jax.eval_shape(build)
+
+
+def params_specs(cfg, max_seq: int = 4096, dtype: Optional[str] = None):
+    def build():
+        p = M.init_params(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+        if (dtype or cfg.dtype) == "bfloat16":
+            p = jax.tree.map(lambda a: a.astype(jnp.bfloat16), p)
+        return p
+    return jax.eval_shape(build)
+
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, max_seq,
+                             jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32))
+
+
+def token_specs(cfg, batch: int):
+    if cfg.embed_inputs:
+        return S((batch, cfg.d_model), np.float32)
+    return S((batch,), np.int32)
+
+
+def input_specs(cfg, cell: dict, opt_cfg: Optional[O.OptCfg] = None):
+    """Returns (kind, args_tuple) for the cell's entry function."""
+    kind, seq, batch = cell["kind"], cell["seq"], cell["batch"]
+    if kind == "train":
+        opt_cfg = opt_cfg or O.OptCfg()
+        state = state_specs(cfg, opt_cfg, max_seq=seq)
+        return "train", (state, batch_specs(cfg, seq, batch))
+    if kind == "prefill":
+        params = params_specs(cfg, max_seq=seq)
+        return "prefill", (params, batch_specs(cfg, seq, batch, with_labels=False))
+    if kind == "decode":
+        params = params_specs(cfg, max_seq=seq)
+        cache = cache_specs(cfg, batch, seq)
+        return "decode", (params, token_specs(cfg, batch), cache)
+    raise ValueError(kind)

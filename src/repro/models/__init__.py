@@ -1,0 +1,8 @@
+"""LM model zoo for the assigned architecture pool."""
+from repro.models import model
+from repro.models.model import (decode_step, forward, init_cache, init_params,
+                                param_count, prefill)
+from repro.models.sharding import clear_rules, set_rules, shard
+
+__all__ = ["model", "init_params", "forward", "prefill", "decode_step",
+           "init_cache", "param_count", "set_rules", "clear_rules", "shard"]

@@ -1,0 +1,208 @@
+"""Encoder-decoder family (whisper-small): 12-layer bidirectional encoder over
+precomputed frame embeddings (conv frontend STUB per the brief), 12-layer
+decoder with causal self-attention + cross-attention. LayerNorm + GELU + learned
+positions (whisper-style), biases on projections."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding import shard, shard_params
+
+
+def _enc_layer_params(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"attn": L.attn_proj_params(k1, cfg),
+            "mlp": L.mlp_params(k2, d, cfg.d_ff),
+            "ln1_s": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "ln2_s": jnp.ones((d,)), "ln2_b": jnp.zeros((d,))}
+
+
+def _dec_layer_params(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {"self": L.attn_proj_params(k1, cfg),
+            "cross": L.attn_proj_params(k2, cfg),
+            "mlp": L.mlp_params(k3, d, cfg.d_ff),
+            "ln1_s": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "lnx_s": jnp.ones((d,)), "lnx_b": jnp.zeros((d,)),
+            "ln2_s": jnp.ones((d,)), "ln2_b": jnp.zeros((d,))}
+
+
+def init_params(key, cfg, max_seq: int = 4096):
+    ke, kp, kenc, kdec = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    d = cfg.d_model
+    return {
+        "embed": L.embed_params(ke, cfg),
+        "pos_enc": jax.random.normal(kp, (cfg.enc_seq, d)) * 0.01,
+        "pos_dec": jax.random.normal(kp, (max(max_seq, 8), d)) * 0.01,
+        "enc_blocks": [jax.vmap(lambda k: _enc_layer_params(k, cfg))(enc_keys)],
+        "blocks": [jax.vmap(lambda k: _dec_layer_params(k, cfg))(dec_keys)],
+        "enc_norm_s": jnp.ones((d,)), "enc_norm_b": jnp.zeros((d,)),
+        "final_norm_s": jnp.ones((d,)), "final_norm_b": jnp.zeros((d,)),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames: (B, enc_seq, d_model) precomputed frame embeddings (stub)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = frames.astype(dtype) + params["pos_enc"][: frames.shape[1]].astype(dtype)
+    x = shard(x, "batch", "seq", None)
+
+    def body(x, p):
+        p = shard_params(p)
+        def fn(xc, pp):
+            h = L.layer_norm(xc, pp["ln1_s"], pp["ln1_b"])
+            q, k, v = L.qkv(h, pp["attn"], cfg)
+            o = L.flash_attention(q, k, v, causal=False)
+            xc = xc + L.attn_out(o, pp["attn"], xc.dtype)
+            h2 = L.layer_norm(xc, pp["ln2_s"], pp["ln2_b"])
+            return xc + L.mlp(h2, pp["mlp"], cfg.act).astype(xc.dtype)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return fn(x, p), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"][0])
+    return L.layer_norm(x, params["enc_norm_s"], params["enc_norm_b"])
+
+
+def _cross_kv(enc_out, p, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def _dec_layer(x, p, cfg, enc_out, pos_q=0, self_kv=None, slot=None, plen=None):
+    """One decoder layer; train mode (self_kv None) or decode (cached)."""
+    h = L.layer_norm(x, p["ln1_s"], p["ln1_b"])
+    q, k, v = L.qkv(h, p["self"], cfg)
+    if self_kv is None:
+        o = L.flash_attention(q, k, v, causal=True)
+        new_kv = (k, v)
+    else:
+        kc, vc = self_kv
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+        o = L.decode_attention(q[:, 0], kc, vc, plen + 1)[:, None]
+        new_kv = (kc, vc)
+    x = x + L.attn_out(o, p["self"], x.dtype)
+    # cross attention
+    hx = L.layer_norm(x, p["lnx_s"], p["lnx_b"])
+    qx = jnp.einsum("bsd,dhk->bshk", hx, p["cross"]["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        qx = qx + p["cross"]["bq"].astype(x.dtype)
+    kx, vx = _cross_kv(enc_out, p["cross"], cfg)
+    ox = L.flash_attention(qx, kx, vx, causal=False)
+    x = x + L.attn_out(ox, p["cross"], x.dtype)
+    h2 = L.layer_norm(x, p["ln2_s"], p["ln2_b"])
+    x = x + L.mlp(h2, p["mlp"], cfg.act).astype(x.dtype)
+    return x, new_kv
+
+
+def forward(params, tokens, cfg, positions=None, frames=None, return_kv=False):
+    """Teacher-forced decode over `tokens` attending to encoded `frames`.
+    When frames is None a zero stub (B, enc_seq, d) is used."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, S = tokens.shape
+    if frames is None:
+        frames = jnp.zeros((B, cfg.enc_seq, cfg.d_model), dtype)
+    enc_out = encode(params, frames, cfg)
+    x = L.embed(tokens, params["embed"], dtype)
+    x = x + params["pos_dec"][:S].astype(dtype)
+
+    def body(x, p):
+        p = shard_params(p)
+        fn = lambda xc, pp: _dec_layer(xc, pp, cfg, enc_out)[0]
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return fn(x, p), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"][0])
+    x = L.layer_norm(x, params["final_norm_s"], params["final_norm_b"])
+    logits = L.unembed(x, params["embed"], cfg)
+    if return_kv:
+        return logits, jnp.float32(0), []
+    return logits, jnp.float32(0)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    Lyr = cfg.n_layers
+    return {
+        "k": jnp.zeros((Lyr, batch, max_seq, kv, dh), dtype),
+        "v": jnp.zeros((Lyr, batch, max_seq, kv, dh), dtype),
+        # cross K/V precomputed once per request
+        "xk": jnp.zeros((Lyr, batch, cfg.enc_seq, kv, dh), dtype),
+        "xv": jnp.zeros((Lyr, batch, cfg.enc_seq, kv, dh), dtype),
+        "len": jnp.int32(0),
+    }
+
+
+def decode_step(params, token, cache, cfg, positions=None):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed(token[:, None], params["embed"], dtype)
+    plen = cache["len"]
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], plen, 1).astype(dtype)
+
+    def body(x, inp):
+        p, kc, vc, xk, xv = inp
+        h = L.layer_norm(x, p["ln1_s"], p["ln1_b"])
+        q, k, v = L.qkv(h, p["self"], cfg)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), plen, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), plen, 1)
+        o = L.decode_attention(q[:, 0], kc, vc, plen + 1)[:, None]
+        x = x + L.attn_out(o, p["self"], x.dtype)
+        hx = L.layer_norm(x, p["lnx_s"], p["lnx_b"])
+        qx = jnp.einsum("bsd,dhk->bshk", hx, p["cross"]["wq"].astype(x.dtype))
+        if cfg.qkv_bias:
+            qx = qx + p["cross"]["bq"].astype(x.dtype)
+        ox = L.decode_attention(qx[:, 0], xk, xv, jnp.int32(xk.shape[1]))[:, None]
+        x = x + L.attn_out(ox, p["cross"], x.dtype)
+        h2 = L.layer_norm(x, p["ln2_s"], p["ln2_b"])
+        x = x + L.mlp(h2, p["mlp"], cfg.act).astype(x.dtype)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"][0], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.layer_norm(x, params["final_norm_s"], params["final_norm_b"])
+    logits = L.unembed(x, params["embed"], cfg)[:, 0]
+    return logits, {**cache, "k": ks, "v": vs, "len": plen + 1}
+
+
+def prefill(params, tokens, cfg, max_seq=None, positions=None, frames=None):
+    """Encode frames + teacher-forced pass over prompt tokens, building the
+    self-attention cache and the per-layer cross K/V."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    if frames is None:
+        frames = jnp.zeros((B, cfg.enc_seq, cfg.d_model), dtype)
+    enc_out = encode(params, frames, cfg)
+    x = L.embed(tokens, params["embed"], dtype)
+    x = x + params["pos_dec"][:S].astype(dtype)
+
+    def body(x, p):
+        xn, (k, v) = _dec_layer(x, p, cfg, enc_out)
+        xk, xv = _cross_kv(enc_out, p["cross"], cfg)
+        return xn, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["blocks"][0])
+    x = L.layer_norm(x, params["final_norm_s"], params["final_norm_b"])
+    logits = L.unembed(x, params["embed"], cfg)
+    cache = init_cache(cfg, B, max_seq, dtype)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks.astype(dtype), 0, 2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs.astype(dtype), 0, 2)
+    cache["xk"] = xks.astype(dtype)
+    cache["xv"] = xvs.astype(dtype)
+    cache["len"] = jnp.int32(S)
+    return logits, cache, jnp.float32(0)

@@ -1,0 +1,195 @@
+"""Hybrid family (zamba2-1.2b): Mamba2 (SSD) backbone with ONE shared
+attention+MLP block applied every ``attn_every`` layers (weights reused across
+applications — Zamba2's parameter sharing; each application keeps its own KV
+cache)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding import shard, shard_params
+
+
+def _mamba_layer_params(key, cfg):
+    return {"mixer": L.mamba2_params(key, cfg), "ln": jnp.zeros((cfg.d_model,))}
+
+
+def _shared_attn_params(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"attn": L.attn_proj_params(k1, cfg),
+            "mlp": L.mlp_params(k2, cfg.d_model, cfg.d_ff),
+            "ln1": jnp.zeros((cfg.d_model,)),
+            "ln2": jnp.zeros((cfg.d_model,))}
+
+
+def _groups(cfg):
+    """(n_groups, tail): n_groups full groups of attn_every mamba layers, each
+    followed by the shared block; `tail` trailing mamba layers."""
+    g = cfg.n_layers // cfg.attn_every
+    return g, cfg.n_layers - g * cfg.attn_every
+
+
+def init_params(key, cfg, max_seq: int = 0):
+    ke, km, ka = jax.random.split(key, 3)
+    keys = jax.random.split(km, cfg.n_layers)
+    stack = jax.vmap(lambda k: _mamba_layer_params(k, cfg))(keys)
+    return {
+        "embed": L.embed_params(ke, cfg),
+        "blocks": [stack],
+        "shared_attn": _shared_attn_params(ka, cfg),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def _mamba_scan(x, stack, cfg, states=None):
+    """Scan mamba layers; returns (x, states_out)."""
+    def body(x, inp):
+        if states is None:
+            p = shard_params(inp)
+            x = shard(x, "batch", "seq", "actd")  # §Perf F2
+            fn = lambda xc, pp: xc + L.mamba2_mixer(
+                L.rms_norm(xc, pp["ln"], cfg.norm_eps), pp["mixer"], cfg)[0]
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            return fn(x, p), None
+        p, conv, ssm = inp
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        y, st = L.mamba2_mixer(h, p["mixer"], cfg,
+                               state={"conv": conv, "ssm": ssm})
+        return x + y, (st["conv"], st["ssm"])
+
+    xs = stack if states is None else (stack, states["conv"], states["ssm"])
+    return jax.lax.scan(body, x, xs)
+
+
+def _shared_block(x, p, cfg, pos, cache=None, slot=None, pos_scalar=None):
+    """One application of the shared attention block. With cache: decode."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv(h, p["attn"], cfg)
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+    if cache is None:
+        o = L.flash_attention(q, k, v, causal=True)
+        new_cache = (k, v)
+    else:
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+        o = L.decode_attention(q[:, 0], kc, vc, pos_scalar + 1)[:, None]
+        new_cache = (kc, vc)
+    x = x + L.attn_out(o, p["attn"], x.dtype)
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp(h2, p["mlp"], cfg.act).astype(x.dtype)
+    return x, new_cache
+
+
+def _split_groups(stack, cfg):
+    g, tail = _groups(cfg)
+    head = jax.tree.map(lambda a: a[: g * cfg.attn_every].reshape(
+        (g, cfg.attn_every) + a.shape[1:]), stack)
+    rest = jax.tree.map(lambda a: a[g * cfg.attn_every:], stack)
+    return g, head, rest
+
+
+def forward(params, tokens, cfg, positions=None, return_kv: bool = False):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed(tokens, params["embed"], dtype)
+    B, S = tokens.shape
+    pos = jnp.arange(S)[None, :].repeat(B, 0) if positions is None else positions
+    g, head, rest = _split_groups(params["blocks"][0], cfg)
+    kvs = []
+    for gi in range(g):
+        grp = jax.tree.map(lambda a: a[gi], head)
+        x, _ = _mamba_scan(x, grp, cfg)
+        x, kv = _shared_block(x, params["shared_attn"], cfg, pos)
+        kvs.append(kv)
+    x, _ = _mamba_scan(x, rest, cfg)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"], cfg)
+    if return_kv:
+        return logits, jnp.float32(0), kvs
+    return logits, jnp.float32(0)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.n_heads * s.head_dim
+    Lyr = cfg.n_layers
+    g, _ = _groups(cfg)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "conv": jnp.zeros((Lyr, batch, s.d_conv - 1, di + 2 * s.d_state), dtype),
+        "ssm": jnp.zeros((Lyr, batch, s.n_heads, s.head_dim, s.d_state), jnp.float32),
+        "attn_k": jnp.zeros((g, batch, max_seq, kv, dh), dtype),
+        "attn_v": jnp.zeros((g, batch, max_seq, kv, dh), dtype),
+        "len": jnp.int32(0),
+    }
+
+
+def decode_step(params, token, cache, cfg, positions=None):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed(token[:, None], params["embed"], dtype)
+    B = x.shape[0]
+    pos_scalar = cache["len"]
+    pos = jnp.full((B, 1), pos_scalar, jnp.int32)
+    g, head, rest = _split_groups(params["blocks"][0], cfg)
+    n_h = g * cfg.attn_every
+    conv_h = cache["conv"][:n_h].reshape((g, cfg.attn_every) + cache["conv"].shape[1:])
+    ssm_h = cache["ssm"][:n_h].reshape((g, cfg.attn_every) + cache["ssm"].shape[1:])
+    convs, ssms, aks, avs = [], [], [], []
+    for gi in range(g):
+        grp = jax.tree.map(lambda a: a[gi], head)
+        x, (cv, sm) = _mamba_scan(x, grp, cfg,
+                                  states={"conv": conv_h[gi], "ssm": ssm_h[gi]})
+        x, (ak, av) = _shared_block(
+            x, params["shared_attn"], cfg, pos,
+            cache=(cache["attn_k"][gi], cache["attn_v"][gi]),
+            slot=pos_scalar, pos_scalar=pos_scalar)
+        convs.append(cv); ssms.append(sm); aks.append(ak); avs.append(av)
+    x, (cv_t, sm_t) = _mamba_scan(x, rest, cfg,
+                                  states={"conv": cache["conv"][n_h:],
+                                          "ssm": cache["ssm"][n_h:]})
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"], cfg)[:, 0]
+    new_cache = {
+        "conv": jnp.concatenate([jnp.stack(convs).reshape((-1,) + cv_t.shape[1:]), cv_t]),
+        "ssm": jnp.concatenate([jnp.stack(ssms).reshape((-1,) + sm_t.shape[1:]), sm_t]),
+        "attn_k": jnp.stack(aks), "attn_v": jnp.stack(avs),
+        "len": pos_scalar + 1,
+    }
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg, max_seq=None, positions=None):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed(tokens, params["embed"], dtype)
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    pos = jnp.arange(S)[None, :].repeat(B, 0)
+    g, head, rest = _split_groups(params["blocks"][0], cfg)
+    cache = init_cache(cfg, B, max_seq, dtype)
+    convs, ssms = [], []
+    ak = cache["attn_k"]; av = cache["attn_v"]
+    for gi in range(g):
+        grp = jax.tree.map(lambda a: a[gi], head)
+        x, (cv, sm) = _mamba_scan(x, grp, cfg, states={
+            "conv": jnp.zeros_like(cache["conv"][:cfg.attn_every]),
+            "ssm": jnp.zeros_like(cache["ssm"][:cfg.attn_every])})
+        x, (k, v) = _shared_block(x, params["shared_attn"], cfg, pos)
+        ak = ak.at[gi, :, :S].set(k.astype(dtype))
+        av = av.at[gi, :, :S].set(v.astype(dtype))
+        convs.append(cv); ssms.append(sm)
+    x, (cv_t, sm_t) = _mamba_scan(x, rest, cfg, states={
+        "conv": jnp.zeros_like(cache["conv"][g * cfg.attn_every:]),
+        "ssm": jnp.zeros_like(cache["ssm"][g * cfg.attn_every:])})
+    convs.append(cv_t); ssms.append(sm_t)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"], cfg)
+    cache.update(
+        conv=jnp.concatenate([c.reshape((-1,) + c.shape[-3:]) for c in convs]),
+        ssm=jnp.concatenate([s.reshape((-1,) + s.shape[-4:]) for s in ssms]),
+        attn_k=ak, attn_v=av, len=jnp.int32(S))
+    return logits, cache, jnp.float32(0)

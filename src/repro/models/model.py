@@ -1,0 +1,46 @@
+"""Family dispatcher: one API over all 10 architectures.
+
+    init_params(key, cfg, max_seq)      parameter pytree
+    forward(params, inputs, cfg, ...)   (logits, aux_loss)
+    prefill(params, inputs, cfg, ...)   (logits, cache, aux)
+    decode_step(params, token, cache, cfg) (logits, cache)
+    init_cache(cfg, batch, max_seq)     decode cache/state
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm, transformer
+
+
+def _mod(cfg):
+    return {
+        "dense": transformer, "moe": transformer, "vlm": transformer,
+        "ssm": ssm, "hybrid": hybrid, "encdec": encdec,
+    }[cfg.family]
+
+
+def init_params(key, cfg, max_seq: int = 4096):
+    return _mod(cfg).init_params(key, cfg, max_seq=max_seq)
+
+
+def forward(params, inputs, cfg, positions=None, **kw):
+    return _mod(cfg).forward(params, inputs, cfg, positions=positions, **kw)
+
+
+def prefill(params, inputs, cfg, max_seq=None, positions=None, **kw):
+    return _mod(cfg).prefill(params, inputs, cfg, max_seq=max_seq,
+                             positions=positions, **kw)
+
+
+def decode_step(params, token, cache, cfg, positions=None):
+    return _mod(cfg).decode_step(params, token, cache, cfg, positions=positions)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return _mod(cfg).init_cache(cfg, batch, max_seq, dtype)
+
+
+def param_count(params) -> int:
+    import jax
+    return sum(x.size for x in jax.tree.leaves(params))

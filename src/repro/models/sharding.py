@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules (MaxText-style) resolved against the active mesh.
+
+Logical axes used by the model code:
+    batch   -> ('pod', 'data') when a pod axis exists, else ('data',)
+    fsdp    -> 'data'   (parameter + optimizer-state sharding)
+    tp      -> 'model'  (tensor parallel: heads / ffn hidden / vocab / experts)
+    seq     -> None by default; 'data' under sequence parallelism (prefill opt)
+    none    -> replicated
+
+``shard(x, *logical)`` applies a with_sharding_constraint when a mesh is
+active and is a no-op otherwise (CPU smoke tests).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "seq": (),
+    # layer-boundary residual saves: ZeRO-R style activation partitioning —
+    # the remat stack shards its d_model dim over TP and re-gathers once per
+    # layer in the backward (16x smaller residual stack; §Perf iteration F2)
+    "actd": ("model",),
+    # attention fallback when n_heads < TP (gemma3 h=8, whisper h=12): run
+    # attention data-parallel over BOTH axes — batch folds onto
+    # ('pod','data','model') so no device idles (§Perf W2)
+    "batch_tp": ("pod", "data", "model"),
+    "none": (),
+}
+
+# base (unstacked) PartitionSpec per parameter leaf name — shared with
+# training.shardspec. FSDP='data', TP='model'.
+PARAM_RULES = {
+    "tok": ("model", "data"), "unembed": ("data", "model"),
+    "pos_enc": (None, None), "pos_dec": (None, None),
+    "wq": ("data", "model", None), "wk": ("data", "model", None),
+    "wv": ("data", "model", None), "wo": ("model", None, "data"),
+    "bq": ("model", None), "bk": ("model", None), "bv": ("model", None),
+    "q_norm": (None,), "k_norm": (None,),
+    "w_gate": ("data", "model"), "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # router is tiny (d×E) and must be whole for local routing decisions in
+    # the EP mailbox dispatch — replicate it
+    "router": (None, None),
+    "we_gate": ("model", "data", None), "we_up": ("model", "data", None),
+    "we_down": ("model", None, "data"),
+    "in_proj": ("data", "model"), "out_proj": ("model", "data"),
+    "x_proj": ("model", None), "dt_proj_w": (None, "model"),
+    "dt_proj_b": ("model",), "conv_w": (None, "model"), "conv_b": ("model",),
+    "D": ("model",), "dt_bias": ("model",), "norm": ("model",),
+    "a_log2": ("model",),   # mamba2 per-head decay (H,)
+}
+
+
+def base_param_spec(name: str, ndim: int, shape=None, sizes=None):
+    if name == "A_log":  # mamba1 (di, N) vs mamba2 (H,)
+        return ("model", None) if ndim >= 2 else ("model",)
+    if name in ("wk", "wv") and shape is not None and sizes:
+        # GQA: kv heads may not divide TP — fall back to row-parallel over
+        # d_model, TP axis ONLY (k/v become TP-replicated after a small psum):
+        # the classic KV-replication scheme. Never contract over 'data' — that
+        # would conflict with the batch sharding and force GSPMD to replicate
+        # activations (measured: 1 TB/dev of all-gather; EXPERIMENTS.md §Perf).
+        kv = shape[-2]
+        if kv % max(sizes.get("model", 1), 1) != 0:
+            return ("model", None, None)
+    return PARAM_RULES.get(name)
+
+
+def fit_axes(entry, dim: int, sizes: dict):
+    """Drop mesh axes that don't divide `dim` (GQA kv<TP, odd vocabs, ...)."""
+    if entry is None:
+        return None
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    kept, prod = [], 1
+    for a in axes:
+        s = sizes.get(a, 0)
+        if s and dim % (prod * s) == 0:
+            kept.append(a)
+            prod *= s
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def set_rules(mesh_or_names, overrides: Optional[dict] = None):
+    """Activate sharding for model code. Call before tracing train/serve
+    steps. Accepts a Mesh (captures axis sizes for divisibility checks) or a
+    tuple of axis names."""
+    if hasattr(mesh_or_names, "axis_names"):
+        names = mesh_or_names.axis_names
+        sizes = {a: int(s) for a, s in
+                 zip(names, mesh_or_names.devices.shape)}
+        _state.mesh = mesh_or_names
+    else:
+        names = tuple(mesh_or_names)
+        sizes = {}
+        _state.mesh = None
+    rules = {}
+    for k, axes in {**DEFAULT_RULES, **(overrides or {})}.items():
+        rules[k] = tuple(a for a in axes if a in names)
+    _state.rules = rules
+    _state.sizes = sizes
+    _state.active = True
+
+
+def active_mesh():
+    return getattr(_state, "mesh", None) if getattr(_state, "active", False) else None
+
+
+def rule_axes(name: str):
+    rules = getattr(_state, "rules", None)
+    return rules.get(name, ()) if rules else ()
+
+
+def clear_rules():
+    _state.active = False
+
+
+def resolve(*logical) -> P:
+    rules = getattr(_state, "rules", None)
+    if rules is None:
+        return P(*[None for _ in logical])
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        axes = rules.get(name, ())
+        out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def shard(x, *logical):
+    """Constrain x's sharding by logical axis names (one per dim).
+
+    Axes that do not divide the dim are dropped (-> explicitly replicated):
+    a silently-failing constraint would leave GSPMD free to scatter e.g. a
+    GQA kv head dim's batch over 'model' and re-gather it inside the
+    attention loop (measured 1.1 TB/dev; EXPERIMENTS.md §Perf)."""
+    if not getattr(_state, "active", False):
+        return x
+    spec = resolve(*logical)
+    sizes = getattr(_state, "sizes", {})
+    if sizes and hasattr(x, "shape") and len(spec) == len(x.shape):
+        spec = P(*(fit_axes(e, d, sizes) for e, d in zip(spec, x.shape)))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def param_spec(*logical) -> P:
+    return resolve(*logical)
+
+
+def shard_params(tree):
+    """Re-constrain (unstacked) layer params to their FSDP×TP specs INSIDE a
+    scan body. Without this, GSPMD hoists the FSDP all-gather of the whole
+    stacked parameter array out of the layer loop — 17 GB of gathered weights
+    resident per device instead of one layer's worth (measured: llama3-8b
+    train_4k temp 48.9 GiB -> see EXPERIMENTS.md §Perf)."""
+    if not getattr(_state, "active", False):
+        return tree
+    sizes = getattr(_state, "sizes", {})
+
+    def constrain(path, leaf):
+        name = ""
+        for e in reversed(path):
+            if isinstance(e, jax.tree_util.DictKey):
+                name = str(e.key)
+                break
+        base = base_param_spec(name, leaf.ndim, leaf.shape, sizes)
+        if base is None:
+            return leaf
+        pad = leaf.ndim - len(base)
+        if pad < 0:
+            base = base[-leaf.ndim:] if leaf.ndim else ()
+            pad = 0
+        full = (None,) * pad + tuple(base)
+        if sizes:
+            full = tuple(fit_axes(e, d, sizes) for e, d in zip(full, leaf.shape))
+        try:
+            return jax.lax.with_sharding_constraint(leaf, P(*full))
+        except (ValueError, RuntimeError):
+            return leaf
+
+    return jax.tree_util.tree_map_with_path(constrain, tree)

@@ -1,0 +1,102 @@
+"""Pure-SSM family (falcon-mamba-7b): Mamba1 (S6) blocks, attention-free.
+
+O(1) decode state per layer -> the long_500k cell is this family's home turf.
+Training materializes nothing bigger than a chunk: lax.scan over chunks
+carries the (B, d_inner, N) state; within-chunk recurrence is an associative
+scan (DESIGN.md §6 hardware adaptation of the CUDA selective-scan kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.sharding import shard, shard_params
+
+
+def _layer_params(key, cfg):
+    k1, _ = jax.random.split(key)
+    return {"mixer": L.mamba1_params(k1, cfg), "ln": jnp.zeros((cfg.d_model,))}
+
+
+def init_params(key, cfg, max_seq: int = 0):
+    ke, kl = jax.random.split(key)
+    keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.embed_params(ke, cfg),
+        "blocks": [jax.vmap(lambda k: _layer_params(k, cfg))(keys)],
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+
+
+def forward(params, tokens, cfg, positions=None, return_kv: bool = False):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed(tokens, params["embed"], dtype)
+
+    def body(x, p):
+        p = shard_params(p)
+        x = shard(x, "batch", "seq", "actd")  # TP-sharded residual save (§Perf F2)
+        fn = lambda xc, pp: xc + L.mamba1_mixer(
+            L.rms_norm(xc, pp["ln"], cfg.norm_eps), pp["mixer"], cfg)[0]
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        return fn(x, p), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"][0])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"], cfg)
+    if return_kv:
+        return logits, jnp.float32(0), []
+    return logits, jnp.float32(0)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    Lyr = cfg.n_layers
+    return {
+        "conv": jnp.zeros((Lyr, batch, s.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((Lyr, batch, di, s.d_state), jnp.float32),
+        "len": jnp.int32(0),
+    }
+
+
+def decode_step(params, token, cache, cfg, positions=None):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed(token[:, None], params["embed"], dtype)
+
+    def body(x, inp):
+        p, conv, ssm = inp
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        y, st = L.mamba1_mixer(h, p["mixer"], cfg,
+                               state={"conv": conv, "ssm": ssm})
+        return x + y, (st["conv"], st["ssm"])
+
+    x, (conv, ssm) = jax.lax.scan(body, x, (params["blocks"][0],
+                                            cache["conv"], cache["ssm"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"], cfg)[:, 0]
+    return logits, {"conv": conv, "ssm": ssm, "len": cache["len"] + 1}
+
+
+def prefill(params, tokens, cfg, max_seq=None, positions=None):
+    """SSM prefill: run the sequence through, capturing the final recurrent
+    state per layer. (States come from re-running the last d_conv-1 tokens +
+    a chunked state pass inside the mixer — here we simply re-scan with state
+    capture, which the chunked mixer gives for free.)"""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.embed(tokens, params["embed"], dtype)
+
+    def body(x, p):
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        y, st = L.mamba1_mixer(h, p["mixer"], cfg)
+        return x + y, (st["conv"], st["ssm"])
+
+    x, (conv, ssm) = jax.lax.scan(body, x, params["blocks"][0])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, params["embed"], cfg)
+    cache = {"conv": conv.astype(dtype), "ssm": ssm,
+             "len": jnp.int32(tokens.shape[1])}
+    return logits, cache, jnp.float32(0)

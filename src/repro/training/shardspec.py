@@ -1,0 +1,139 @@
+"""Parameter / state / batch PartitionSpecs.
+
+Param specs are derived from leaf NAMES (renamed where ambiguous), with extra
+leading dims (layer-stacking) mapped to None. FSDP = 'data', TP = 'model';
+the pod axis carries pure data parallelism (batch only), so parameters are
+replicated across pods and gradients all-reduce across them once per step.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import base_param_spec as _base_spec_impl
+from repro.models.sharding import fit_axes
+
+FSDP, TP = "data", "model"
+
+
+def _leaf_name(path) -> str:
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return str(e.key)
+    return ""
+
+
+def _base_spec(name: str, ndim: int):
+    return _base_spec_impl(name, ndim)
+
+
+def _axis_sizes(mesh) -> dict:
+    if mesh is None:
+        return {}
+    return {a: int(s) for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+
+
+def _fit(spec_entry, dim: int, sizes: dict):
+    if spec_entry is None or not sizes:
+        return spec_entry
+    return fit_axes(spec_entry, dim, sizes)
+
+
+def param_pspecs(params, mesh=None) -> object:
+    """Pytree of PartitionSpec matching `params` (arrays or ShapeDtypeStructs).
+    With `mesh`, specs are divisibility-checked per dim."""
+    sizes = _axis_sizes(mesh)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        base = _base_spec_impl(name, nd, leaf.shape, sizes)
+        if base is None:
+            return P()  # replicate (norm scales, misc)
+        pad = nd - len(base)
+        if pad < 0:  # unstacked variant of a rule written for stacked use
+            base = base[-nd:] if nd else ()
+            pad = 0
+        full = (None,) * pad + tuple(base)
+        full = tuple(_fit(e, d, sizes) for e, d in zip(full, leaf.shape))
+        return P(*full)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def state_pspecs(state, mesh=None) -> object:
+    """Train-state specs: params/master/m/v mirror param specs; step replicated."""
+    out = {}
+    for k in ("params", "master", "m", "v"):
+        if k in state:
+            out[k] = param_pspecs(state[k], mesh)
+    out["step"] = P()
+    return out
+
+
+def batch_pspecs(batch, mesh) -> object:
+    """Batch dims shard over ('pod','data'); mrope positions keep their
+    leading 3-axis replicated; everything else follows the batch dim."""
+    names = mesh.axis_names if hasattr(mesh, "axis_names") else mesh
+    sizes = _axis_sizes(mesh) if hasattr(mesh, "axis_names") else {}
+    baxes = tuple(a for a in ("pod", "data") if a in names)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        name = _leaf_name(path)
+        if name == "positions" and nd == 3:   # (3, B, S) mrope
+            return P(None, _fit(b, leaf.shape[1], sizes), None)
+        if not nd:
+            return P()
+        return P(*((_fit(b, leaf.shape[0], sizes),) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_pspecs(cache, mesh) -> object:
+    """Decode cache: batch dim shards over ('pod','data'), kv-heads over
+    'model' where present (dim -2 of (L?, B, S, KV, dh) tensors)."""
+    names = mesh.axis_names if hasattr(mesh, "axis_names") else mesh
+    sizes = _axis_sizes(mesh) if hasattr(mesh, "axis_names") else {}
+    baxes = tuple(a for a in ("pod", "data") if a in names)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    tp = "model" if "model" in names else None
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        name = _leaf_name(path)
+        if name == "len" or nd == 0:
+            return P()
+        if name in ("k", "v", "xk", "xv", "attn_k", "attn_v"):
+            # (L|g, B, S, KV, dh) stacked or (B, S, KV, dh) unstacked.
+            # kv-heads that don't divide TP (qwen2-vl kv=2) fall back to
+            # sharding the HEAD DIM — a replicated 32k cache would be
+            # tens of GB per device.
+            kv_dim, dh_dim = leaf.shape[-2], leaf.shape[-1]
+            tp_sz = sizes.get(tp, 1) if tp else 1
+            if tp and kv_dim % tp_sz and dh_dim % tp_sz == 0:
+                raw = ((None, b, None, None, tp) if nd == 5
+                       else (b, None, None, tp))
+            else:
+                raw = ((None, b, None, tp, None) if nd == 5
+                       else (b, None, tp, None))
+        elif name == "ssm":
+            # mamba1 (L, B, di, N) / mamba2 (L, B, H, Pd, N): channel/head on tp
+            raw = (None, b, tp) + (None,) * (nd - 3)
+        elif name == "conv":
+            # (L, B, K-1, C): conv channels on tp
+            raw = (None, b, None, tp)
+        else:
+            raw = (b,) + (None,) * (nd - 1)
+        return P(*(_fit(e, d, sizes) for e, d in zip(raw, leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def named(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,128 @@
+"""Train / serve step builders: loss, grads, optimizer update, sharding glue.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure (state, batch) -> (state,
+metrics) function; shardings are attached by the caller (launch/dryrun.py or
+launch/train.py) via the specs in training.shardspec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.training import optimizer as O
+
+IGNORE = -1  # label ignore index
+
+
+def cross_entropy(logits, labels):
+    """Mean CE over non-ignored positions. logits (B,S,V), labels (B,S).
+
+    The f32 upcast feeds ONLY the logsumexp reduction (fuses — no
+    materialized f32 copy of the logits); the gold gather reads the original
+    dtype directly."""
+    mask = labels != IGNORE
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold.astype(jnp.float32)) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.family == "encdec" and "frames" in batch:
+            kw["frames"] = batch["frames"]
+        logits, aux = M.forward(params, batch["inputs"], cfg,
+                                positions=batch.get("positions"), **kw)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: O.OptCfg, accum_steps: int = 1):
+    """accum_steps > 1 = gradient accumulation: the global batch is split
+    into microbatches scanned sequentially, grads averaged in fp32. This is
+    the capacity knob for cells whose per-device activations exceed HBM at
+    the assigned global batch (EXPERIMENTS.md §Perf post-protocol notes):
+    peak activation memory scales 1/accum_steps, FLOPs unchanged."""
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(state, batch):
+        if accum_steps == 1:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((accum_steps, a.shape[0] // accum_steps)
+                                    + a.shape[1:])
+                if a.ndim and a.shape[0] % accum_steps == 0 else
+                a.reshape((accum_steps, -1) + a.shape[2:]), batch)
+            # mrope positions are (3, B, S): split on dim 1
+            if "positions" in batch and batch["positions"].ndim == 3 \
+                    and batch["positions"].shape[0] == 3:
+                p = batch["positions"]
+                micro["positions"] = p.reshape(
+                    (3, accum_steps, p.shape[1] // accum_steps) + p.shape[2:]
+                ).transpose(1, 0, 2, 3)
+
+            def one(carry, mb):
+                gacc, lacc, ce, aux = carry
+                (l, parts), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l, ce + parts["ce"], aux + parts["aux"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state["params"])
+            (gsum, lsum, cesum, auxsum), _ = jax.lax.scan(
+                one, (g0, jnp.float32(0), jnp.float32(0), jnp.float32(0)), micro)
+            k = float(accum_steps)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+            parts = {"ce": cesum / k, "aux": auxsum / k}
+        new_state, om = O.apply_updates(state, grads, opt_cfg)
+        metrics = dict(loss=loss, **parts, **om)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    loss_fn = make_loss_fn(cfg)
+
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, batch)
+        return dict(loss=loss, **parts)
+
+    return eval_step
+
+
+# ------------------------------------------------------------- serving steps
+
+def make_prefill_step(cfg, max_seq: Optional[int] = None):
+    def prefill_step(params, batch):
+        kw = {}
+        if cfg.family == "encdec" and "frames" in batch:
+            kw["frames"] = batch["frames"]
+        logits, cache, _ = M.prefill(params, batch["inputs"], cfg,
+                                     max_seq=max_seq,
+                                     positions=batch.get("positions"), **kw)
+        next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_tok.astype(jnp.int32), cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """One token of greedy decode: (params, token, cache) -> (token, cache).
+    This is the function the decode_32k / long_500k cells lower."""
+    def serve_step(params, token, cache):
+        logits, cache = M.decode_step(params, token, cache, cfg)
+        nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+        return nxt, cache
+    return serve_step

@@ -1,0 +1,63 @@
+"""Scan-aware HLO analyzer: trip-count multipliers must make scanned and
+unrolled modules agree; collective parsing must find psums."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hloparse import analyze_text
+
+
+def _body(x, w):
+    return jnp.tanh(x @ w), None
+
+
+def test_scan_equals_unroll_flops():
+    xs = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+
+    def scanned(x, ws):
+        x, _ = jax.lax.scan(_body, x, ws)
+        return x
+
+    def unrolled(x, ws):
+        for i in range(8):
+            x, _ = _body(x, ws[i])
+        return x
+
+    fs = analyze_text(jax.jit(scanned).lower(xs, ws).compile().as_text())
+    fu = analyze_text(jax.jit(unrolled).lower(xs, ws).compile().as_text())
+    expect = 8 * 2 * 64 * 256 * 256
+    assert fs["flops"] == expect
+    assert fu["flops"] == expect
+    # hbm same order of magnitude (scan counts streamed xs slices; unroll
+    # counts whole-array reads at each static slice)
+    assert 0.1 < fs["hbm"] / fu["hbm"] < 3.0
+
+
+def test_nested_scan_multipliers():
+    def inner(x, w):
+        x, _ = jax.lax.scan(_body, x, w)
+        return x
+
+    def outer(x, ws):
+        def ob(x, w3):
+            return inner(x, w3), None
+        x, _ = jax.lax.scan(ob, x, ws)
+        return x
+
+    xs = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 5, 64, 64), jnp.float32)
+    r = analyze_text(jax.jit(outer).lower(xs, ws).compile().as_text())
+    assert r["flops"] == 3 * 5 * 2 * 16 * 64 * 64
+
+
+def test_collectives_parsed_with_trip_count():
+    import os
+    if len(jax.devices()) < 2:
+        # single-device CI: the psum lowers away; just check no crash
+        def f(x):
+            return jnp.sum(x * x)
+        r = analyze_text(jax.jit(f).lower(
+            jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile().as_text())
+        assert r["coll_bytes_total"] >= 0
+        return

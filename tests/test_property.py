@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+import scipy.sparse.csgraph as csgraph
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms import connected_components, max_vertex, sssp
+from repro.core import meta_diameter
+from repro.gofs.formats import PAD, partition_graph
+from repro.gofs.generators import random_graph
+from repro.gofs.partition import bfs_grow_partition, hash_partition
+
+
+def _pg(n, deg, parts, seed, partitioner=hash_partition, weighted=False):
+    g = random_graph(n, avg_degree=deg, seed=seed, weighted=weighted)
+    return g, partition_graph(g, partitioner(g, parts, seed=seed), parts)
+
+
+def _gather(pg, per_part):
+    out = np.zeros(pg.n_global, per_part.dtype)
+    for p in range(pg.num_parts):
+        m = pg.vmask[p]
+        out[pg.global_id[p][m]] = per_part[p][m]
+    return out
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 120), st.floats(1.0, 5.0), st.integers(2, 6),
+       st.integers(0, 10_000))
+def test_cc_count_invariant(n, deg, parts, seed):
+    """#components from the engine == scipy, for any graph/partitioning."""
+    g, pg = _pg(n, deg, parts, seed)
+    ncc_true, _ = csgraph.connected_components(g.undirected_csr(), directed=False)
+    _, ncc, _ = connected_components(pg, mode="subgraph")
+    assert ncc == ncc_true
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(10, 100), st.integers(2, 5), st.integers(0, 10_000))
+def test_sssp_equals_scipy(n, parts, seed):
+    g, pg = _pg(n, 3.0, parts, seed, weighted=True)
+    d_true = csgraph.shortest_path(g.csr().T, indices=[0])[0]
+    dist, _ = sssp(pg, 0, mode="subgraph")
+    ours = _gather(pg, dist)
+    finite = np.isfinite(d_true)
+    assert np.array_equal(np.isfinite(ours), finite)
+    np.testing.assert_allclose(ours[finite], d_true[finite], rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 80), st.integers(2, 4), st.integers(0, 10_000))
+def test_subgraph_never_more_supersteps_than_vertex(n, parts, seed):
+    """Paper §3.3: worst case the sub-graph model degenerates to vertex
+    centric — it can never take MORE supersteps."""
+    _, pg = _pg(n, 2.5, parts, seed)
+    _, _, t_sub = connected_components(pg, mode="subgraph")
+    _, _, t_vert = connected_components(pg, mode="vertex")
+    assert t_sub.supersteps <= t_vert.supersteps
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(12, 80), st.integers(2, 4), st.integers(0, 10_000))
+def test_max_vertex_is_global_max_per_component(n, parts, seed):
+    g, pg = _pg(n, 3.0, parts, seed)
+    x, _ = max_vertex(pg, mode="subgraph")
+    vals = _gather(pg, x)
+    _, lab = csgraph.connected_components(g.undirected_csr(), directed=False)
+    for c in np.unique(lab):
+        comp = np.flatnonzero(lab == c)
+        assert np.all(vals[comp] == comp.max())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 80), st.integers(2, 4), st.integers(0, 10_000))
+def test_supersteps_bounded_by_meta_diameter(n, parts, seed):
+    _, pg = _pg(n, 2.5, parts, seed)
+    _, _, tele = connected_components(pg, mode="subgraph")
+    dm = meta_diameter(pg, sample=128)
+    assert tele.supersteps <= dm + 3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(16, 64), st.integers(2, 4), st.integers(0, 2**16))
+def test_partitioners_cover_all_vertices(n, parts, seed):
+    g = random_graph(n, avg_degree=3.0, seed=seed)
+    for fn in (hash_partition, bfs_grow_partition):
+        a = fn(g, parts, seed=seed)
+        assert a.shape == (n,)
+        assert a.min() >= 0 and a.max() < parts
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(16, 64), st.integers(0, 2**16))
+def test_mamba2_vs_mamba1_style_recurrence(S, seed):
+    """SSD chunked output is invariant to the chunk size (algebraic identity)."""
+    import jax, jax.numpy as jnp
+    from repro.configs import ARCHS
+    from repro.models import layers as L
+    cfg = ARCHS["zamba2-1.2b"].reduced()
+    key = jax.random.PRNGKey(seed)
+    p = L.mamba2_params(key, cfg)
+    x = jax.random.normal(key, (1, S, cfg.d_model)) * 0.2
+    y1, _ = L.mamba2_mixer(x, p, cfg, chunk=4)
+    y2, _ = L.mamba2_mixer(x, p, cfg, chunk=S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-4)
