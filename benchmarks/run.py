@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
     fig4c_*   superstep counts + diameter correlation (paper Fig 4c, §6.3)
     fig5_*    straggler/skew distribution + partitioner fix (paper Fig 5, §7)
     blockrank_* BlockRank vs classic PageRank supersteps (paper §5.3)
+    serving_* batched multi-query serving QPS vs sequential (Gopher Serve)
 """
 from __future__ import annotations
 
@@ -25,13 +26,14 @@ def _blockrank():
 
 def main() -> None:
     from benchmarks import (bench_goffish_vs_vertex, bench_loading,
-                            bench_straggler, bench_supersteps)
+                            bench_serving, bench_straggler, bench_supersteps)
     print("name,us_per_call,derived")
     bench_goffish_vs_vertex.run()
     bench_loading.run()
     bench_supersteps.run()
     bench_straggler.run()
     _blockrank()
+    bench_serving.run()
 
 
 if __name__ == "__main__":

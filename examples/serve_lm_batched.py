@@ -1,0 +1,14 @@
+"""Batched LM-serving example: prefill + greedy decode on the reduced llama3.
+(For GRAPH-query serving — the Gopher Serve subsystem — see
+``examples/serve_graph_queries.py``.)
+
+    PYTHONPATH=src python examples/serve_lm_batched.py
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "llama3-8b", "--reduced",
+                "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    serve.main()

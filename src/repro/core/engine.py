@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core import messages as msg
 from repro.gofs.formats import PAD, PartitionedGraph
 
@@ -43,8 +44,94 @@ _GB_FIELDS = ["nbr", "wgt", "vmask", "out_degree", "global_id", "sg_id",
 class Telemetry:
     supersteps: int
     local_iters: np.ndarray        # (P,) cumulative sweep iterations (straggler signal)
-    changed_hist: np.ndarray       # (max_supersteps,) #partitions changed per superstep
+    changed_hist: np.ndarray       # (supersteps,) #partitions changed per superstep
     messages_sent: int
+    # query-batched runs only: per-query superstep at which the query last
+    # changed (its individual convergence point — it stops sending after this)
+    query_supersteps: Optional[np.ndarray] = None
+
+
+def _binned_adjacency(pg: PartitionedGraph, lane_pad: int = 8):
+    """Two-bin the local ELL by degree (kernels.ops.binned_ell_spmv_multi
+    layout):
+    a narrow (P, v_max, w_lo) block for the bulk plus a full-width
+    (P, ah_max, d_max) block for the few hub rows. One mega-hub otherwise
+    forces every row's sweep lane to its width."""
+    P, v_max, d_pad = pg.nbr.shape
+    deg = (pg.nbr != PAD).sum(2)
+    bulk = deg[deg > 0]
+    p95 = int(np.percentile(bulk, 95)) if bulk.size else 1
+    w_lo = min(((max(p95, 1) + lane_pad - 1) // lane_pad) * lane_pad, d_pad)
+    is_hub = deg > w_lo
+    ah_max = max(int(is_hub.sum(1).max()) if is_hub.size else 0, 1)
+    nbr_lo = pg.nbr[:, :, :w_lo].copy()
+    wgt_lo = pg.wgt[:, :, :w_lo].copy()
+    nbr_lo[is_hub] = PAD
+    wgt_lo[is_hub] = 0.0
+    hub_idx = np.full((P, ah_max), PAD, np.int32)
+    hub_nbr = np.full((P, ah_max, d_pad), PAD, np.int32)
+    hub_wgt = np.zeros((P, ah_max, d_pad), np.float32)
+    for p in range(P):
+        hv = np.flatnonzero(is_hub[p])
+        hub_idx[p, :hv.size] = hv
+        hub_nbr[p, :hv.size] = pg.nbr[p, hv]
+        hub_wgt[p, :hv.size] = pg.wgt[p, hv]
+    return nbr_lo, wgt_lo, hub_idx, hub_nbr, hub_wgt
+
+
+def _mailbox_inverse(pg: PartitionedGraph, lane_pad: int = 8):
+    """Precompute the mailbox routing plan's INVERSE maps so both sides of
+    the superstep exchange are pure gathers (XLA:CPU/TPU scatter is the
+    dominant superstep cost otherwise; the plan is static, so nothing needs
+    to be scattered at runtime — GoFS already fixed every slot at build).
+
+      ob_inv   (P, P*cap)        outbox slot -> remote-edge index (PAD empty)
+      ib_lo    (P, v_max, m_lo)  vertex -> flat received positions
+                                 (src_part*cap + slot), PAD fill
+      ib_hub_idx (P, hr_max)     vertices receiving > m_lo messages
+      ib_hub   (P, hr_max, m_hi) their (wider) feed lists
+
+    The inbox side is two-binned by in-message count for the same reason the
+    ELL sweep degree-bins: one hub receiver would otherwise pad every
+    vertex's feed list to the hub's width.
+    """
+    from repro.gofs.formats import _cumcount
+    P, _ = pg.re_src.shape
+    cap = pg.mailbox_cap
+    v_max = pg.v_max
+    sp_all, e_all = np.nonzero(pg.re_src != PAD)
+    d_all = pg.re_dst_part[sp_all, e_all].astype(np.int64)
+    v_all = pg.re_dst_local[sp_all, e_all].astype(np.int64)
+    c_all = pg.re_slot[sp_all, e_all].astype(np.int64)
+
+    ob_inv = np.full((P, P * cap), PAD, np.int32)
+    ob_inv[sp_all, d_all * cap + c_all] = e_all
+
+    counts = np.zeros((P, v_max), np.int64)
+    np.add.at(counts, (d_all, v_all), 1)
+    m_hi = max(int(counts.max()) if counts.size else 1, 1)
+    bulk = counts[counts > 0]
+    p95 = int(np.percentile(bulk, 95)) if bulk.size else 1
+    m_lo = min(((max(p95, 1) + lane_pad - 1) // lane_pad) * lane_pad, m_hi)
+    m_hi = ((m_hi + lane_pad - 1) // lane_pad) * lane_pad
+    is_hub = counts > m_lo
+    hr_max = max(int(is_hub.sum(1).max()) if is_hub.size else 0, 1)
+
+    ib_lo = np.full((P, v_max, m_lo), PAD, np.int32)
+    ib_hub_idx = np.full((P, hr_max), PAD, np.int32)
+    ib_hub = np.full((P, hr_max, m_hi), PAD, np.int32)
+    hub_row = np.full((P, v_max), -1, np.int64)
+    for d in range(P):
+        hv = np.flatnonzero(is_hub[d])
+        hub_row[d, hv] = np.arange(hv.size)
+        ib_hub_idx[d, :hv.size] = hv
+    k_all = _cumcount(d_all * v_max + v_all)
+    f_all = (sp_all * cap + c_all).astype(np.int32)
+    hub_msg = is_hub[d_all, v_all]
+    ib_lo[d_all[~hub_msg], v_all[~hub_msg], k_all[~hub_msg]] = f_all[~hub_msg]
+    ib_hub[d_all[hub_msg], hub_row[d_all[hub_msg], v_all[hub_msg]],
+           k_all[hub_msg]] = f_all[hub_msg]
+    return ob_inv, ib_lo, ib_hub_idx, ib_hub
 
 
 def graph_block(pg: PartitionedGraph, as_spec: bool = False) -> dict:
@@ -52,6 +139,10 @@ def graph_block(pg: PartitionedGraph, as_spec: bool = False) -> dict:
     ``as_spec=True`` returns ShapeDtypeStructs (dry-run lowering)."""
     gb = {k: np.asarray(getattr(pg, k)) for k in _GB_FIELDS}
     gb["part_index"] = np.arange(pg.num_parts, dtype=np.int32)
+    (gb["nbr_lo"], gb["wgt_lo"], gb["adj_hub_idx"],
+     gb["adj_hub_nbr"], gb["adj_hub_wgt"]) = _binned_adjacency(pg)
+    (gb["ob_inv"], gb["ib_lo"],
+     gb["ib_hub_idx"], gb["ib_hub"]) = _mailbox_inverse(pg)
     for name, arr in pg.attrs.items():
         gb[f"attr_{name}"] = np.asarray(arr)
     if as_spec:
@@ -64,7 +155,7 @@ class GopherEngine:
 
     def __init__(self, pg: PartitionedGraph, program, backend: str = "local",
                  mesh=None, axis_name: str = "parts",
-                 max_supersteps: int = 4096):
+                 max_supersteps: int = 4096, gb: Optional[dict] = None):
         assert backend in ("local", "shard_map")
         if backend == "shard_map":
             assert mesh is not None
@@ -76,49 +167,91 @@ class GopherEngine:
         self.mesh = mesh
         self.axis_name = axis_name
         self.max_supersteps = max_supersteps
+        self._gb = gb                # cached device-side graph block; pass a
+                                     # shared one so many engines (a serving
+                                     # fleet) reuse a single device copy
+        self._runner_cache = {}      # (backend, Q) -> compiled BSP loop
+
+    def _graph_block(self):
+        """The device graph block, built once per engine — every query batch
+        served by this engine shares it (and the jit cache entries keyed on
+        its shapes)."""
+        if self._gb is None:
+            self._gb = graph_block(self.pg)
+        return self._gb
 
     # ---------------- superstep body (backend-shared) ----------------
-    def make_superstep(self, gb):
+    def make_superstep(self, gb, num_queries: Optional[int] = None):
         """One BSP superstep over a partition batch gb (leading axis = local
-        partition count). Returns (state, inbox, changed(P,), liters(P,), nsent)."""
+        partition count). Returns (state, inbox, changed, liters(P,), nsent).
+
+        With ``num_queries=Q`` the program is query-batched: state/inbox
+        leaves carry a QUERY-TRAILING (v_max, Q) shape per partition (Q rides
+        the contiguous lane dimension), `changed` is per-partition per-query
+        (P, Q), and the mailbox carries cap*Q slots per partition pair —
+        routing is identical on both backends.
+        """
         prog = self.program
         cap = self.pg.mailbox_cap
         v_max = self.pg.v_max
         combine = prog.combine
         num_parts = self.pg.num_parts
+        Q = num_queries
 
         def sstep(state, inbox, step):
             new_state, changed, liters = jax.vmap(
                 prog.superstep, in_axes=(0, 0, 0, None))(state, inbox, gb, step)
             vals, send = jax.vmap(prog.messages)(new_state, gb)
-            ov, oi = jax.vmap(
-                functools.partial(msg.build_outbox, num_parts=num_parts,
-                                  cap=cap, combine=combine))(
-                vals, gb["re_src"], gb["re_dst_part"], gb["re_dst_local"],
-                gb["re_slot"], send)
-            if self.backend == "local":
-                iv, ii = msg.route_local(ov, oi)
+            # gather-form mailbox: slots PULL through the precomputed inverse
+            # routing plan — no runtime scatter, and only values travel
+            if Q is None:
+                build = functools.partial(msg.build_outbox_gather,
+                                          num_parts=num_parts, cap=cap,
+                                          combine=combine)
             else:
-                iv, ii = msg.route_shard_map(ov, oi, self.axis_name)
-            inbox = jax.vmap(
-                functools.partial(msg.combine_inbox, v_max=v_max, combine=combine))(iv, ii)
+                build = functools.partial(msg.build_outbox_gather_batched,
+                                          num_parts=num_parts, cap=cap,
+                                          combine=combine)
+            ov = jax.vmap(build)(vals, send, gb["ob_inv"])
+            if self.backend == "local":
+                iv = msg.route_local(ov)
+            else:
+                iv = msg.route_shard_map(ov, self.axis_name)
+            if Q is None:
+                comb = functools.partial(msg.combine_inbox_gather,
+                                         v_max=v_max, combine=combine)
+            else:
+                comb = functools.partial(msg.combine_inbox_gather_batched,
+                                         v_max=v_max, cap=cap, combine=combine)
+            inbox = jax.vmap(comb)(iv, gb["ib_lo"], gb["ib_hub_idx"],
+                                   gb["ib_hub"])
             nsent = jnp.sum(send).astype(jnp.int32)
             return new_state, inbox, changed, liters, nsent
 
         return sstep
 
-    def _run_batched(self, gb):
+    def _run_batched(self, gb, num_queries: Optional[int] = None):
         """The full BSP loop over a partition batch. Runs as-is on the local
-        backend; runs per-shard (with collectives) under shard_map."""
+        backend; runs per-shard (with collectives) under shard_map.
+
+        Query-batched runs halt when NO query changed anywhere; a query whose
+        own flags went quiet stops producing messages (its send mask is gated
+        on per-query changed_v) while the rest of the batch keeps moving.
+        """
         prog = self.program
+        Q = num_queries
         ident = msg.COMBINE_IDENTITY[prog.combine]
-        sstep = self.make_superstep(gb)
+        sstep = self.make_superstep(gb, num_queries=Q)
         p_local = gb["vmask"].shape[0]
         state0 = jax.vmap(prog.init)(gb)
-        inbox0 = jnp.full((p_local, self.pg.v_max), ident, jnp.float32)
+        ib_shape = ((p_local, self.pg.v_max) if Q is None
+                    else (p_local, self.pg.v_max, Q))
+        inbox0 = jnp.full(ib_shape, ident, jnp.float32)
         tele0 = dict(liters=jnp.zeros((p_local,), jnp.int32),
                      hist=jnp.zeros((self.max_supersteps,), jnp.int32),
                      sent=jnp.int32(0))
+        if Q is not None:
+            tele0["qsteps"] = jnp.zeros((Q,), jnp.int32)
 
         def cond(c):
             _, _, step, done, _ = c
@@ -127,17 +260,29 @@ class GopherEngine:
         def body(c):
             state, inbox, step, _, tele = c
             state, inbox, changed, liters, nsent = sstep(state, inbox, step)
-            any_changed = jnp.any(changed)
-            nchanged = jnp.sum(changed.astype(jnp.int32))
-            if self.backend == "shard_map":
-                any_changed = jax.lax.psum(any_changed.astype(jnp.int32),
-                                           self.axis_name) > 0
-                nchanged = jax.lax.psum(nchanged, self.axis_name)
-                nsent = jax.lax.psum(nsent, self.axis_name)
-            tele = dict(liters=tele["liters"] + liters,
-                        hist=tele["hist"].at[step].set(nchanged),
-                        sent=tele["sent"] + nsent)
-            return state, inbox, step + 1, ~any_changed, tele
+            if Q is None:
+                any_changed = jnp.any(changed)
+                nchanged = jnp.sum(changed.astype(jnp.int32))
+                if self.backend == "shard_map":
+                    any_changed = jax.lax.psum(any_changed.astype(jnp.int32),
+                                               self.axis_name) > 0
+                    nchanged = jax.lax.psum(nchanged, self.axis_name)
+                    nsent = jax.lax.psum(nsent, self.axis_name)
+            else:
+                changed_q = jnp.any(changed, axis=0).astype(jnp.int32)  # (Q,)
+                nchanged = jnp.sum(jnp.any(changed, axis=-1).astype(jnp.int32))
+                if self.backend == "shard_map":
+                    changed_q = jax.lax.psum(changed_q, self.axis_name)
+                    nchanged = jax.lax.psum(nchanged, self.axis_name)
+                    nsent = jax.lax.psum(nsent, self.axis_name)
+                any_changed = jnp.any(changed_q > 0)
+            new_tele = dict(liters=tele["liters"] + liters,
+                            hist=tele["hist"].at[step].set(nchanged),
+                            sent=tele["sent"] + nsent)
+            if Q is not None:
+                new_tele["qsteps"] = jnp.where(changed_q > 0, step + 1,
+                                               tele["qsteps"])
+            return state, inbox, step + 1, ~any_changed, new_tele
 
         state, _, steps, _, tele = jax.lax.while_loop(
             cond, body, (state0, inbox0, jnp.int32(0), jnp.bool_(False), tele0))
@@ -153,18 +298,56 @@ class GopherEngine:
         synchronization points ARE the recovery lines)."""
         if checkpointer is not None and checkpoint_every > 0:
             return self._run_checkpointed(checkpointer, checkpoint_every, resume)
-        if self.backend == "local":
-            gb = graph_block(self.pg)
-            state, steps, tele = jax.jit(lambda g: self._run_batched(g))(gb)
-        else:
-            state, steps, tele = self._sharded_fn()(graph_block(self.pg))
-        telemetry = Telemetry(
+        gb = self._graph_block()
+        state, steps, tele = self._runner(gb_example=gb)(gb)
+        return jax.tree.map(np.asarray, state), self._telemetry(steps, tele)
+
+    def run_queries(self, extra: Optional[dict] = None):
+        """Run a query-batched program (``program.num_queries`` = Q) to global
+        quiescence of ALL queries in ONE BSP run.
+
+        ``extra`` carries the per-request dynamic inputs (query init values,
+        PPR seed vectors, ...) as additional (P, ...) graph-block entries, so
+        the compiled loop is reused across request batches of the same shape
+        — only the query arrays are re-transferred.
+
+        Returns (state, Telemetry) where state leaves are (P, v_max, Q)
+        (query-trailing) and ``telemetry.query_supersteps[q]`` is the
+        superstep at which query q last changed.
+        """
+        Q = getattr(self.program, "num_queries", None)
+        assert Q is not None, "run_queries requires a query-batched program"
+        gb = dict(self._graph_block())
+        for k, v in (extra or {}).items():
+            gb[k] = jnp.asarray(v)
+        state, steps, tele = self._runner(num_queries=Q, gb_example=gb)(gb)
+        return jax.tree.map(np.asarray, state), self._telemetry(steps, tele)
+
+    def _telemetry(self, steps, tele) -> Telemetry:
+        return Telemetry(
             supersteps=int(steps),
             local_iters=np.asarray(tele["liters"]).reshape(-1),
-            changed_hist=np.asarray(tele["hist"]),
+            changed_hist=np.asarray(tele["hist"])[:int(steps)],
             messages_sent=int(tele["sent"]) if np.ndim(tele["sent"]) == 0 else int(np.max(tele["sent"])),
+            query_supersteps=(np.asarray(tele["qsteps"])
+                              if "qsteps" in tele else None),
         )
-        return jax.tree.map(np.asarray, state), telemetry
+
+    def _runner(self, num_queries: Optional[int] = None, gb_example=None):
+        """The compiled BSP loop, cached per (backend, Q, gb keys) so
+        repeated serving batches hit the same jit entry instead of
+        re-tracing. The gb key set is part of the cache key because the
+        shard_map in_specs are baked from the first call's block structure."""
+        key = (self.backend, num_queries,
+               frozenset(gb_example) if gb_example is not None else None)
+        if key not in self._runner_cache:
+            if self.backend == "local":
+                self._runner_cache[key] = jax.jit(functools.partial(
+                    self._run_batched, num_queries=num_queries))
+            else:
+                self._runner_cache[key] = self._sharded_fn(
+                    num_queries=num_queries, gb_example=gb_example)
+        return self._runner_cache[key]
 
     def _run_checkpointed(self, ck, every: int, resume: bool):
         """Chunked BSP: jitted inner loop of <= `every` supersteps, snapshot
@@ -215,25 +398,30 @@ class GopherEngine:
                          changed_hist=np.zeros(0, np.int32), messages_sent=-1)
         return jax.tree.map(np.asarray, state), tele
 
-    def _sharded_fn(self):
+    def _sharded_fn(self, num_queries: Optional[int] = None, gb_example=None):
         spec = P(self.axis_name)
         rep = P()
 
         def body(gb_shard):
-            state, steps, tele = self._run_batched(gb_shard)
+            state, steps, tele = self._run_batched(gb_shard,
+                                                   num_queries=num_queries)
             return state, steps, tele
 
-        gb_spec = jax.tree.map(lambda _: spec,
-                               graph_block(self.pg, as_spec=True))
-        # state leaves shard over parts; steps + hist + sent are replicated;
-        # liters shard over parts.
+        gb_shapes = (graph_block(self.pg, as_spec=True) if gb_example is None
+                     else {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                           for k, v in gb_example.items()})
+        gb_spec = jax.tree.map(lambda _: spec, gb_shapes)
+        # state leaves shard over parts; steps + hist + sent (+ per-query
+        # qsteps, already psum'd) are replicated; liters shard over parts.
         state_spec = jax.tree.map(lambda _: spec,
                                   jax.eval_shape(lambda g: jax.vmap(self.program.init)(g),
-                                                 graph_block(self.pg, as_spec=True)))
-        out_specs = (state_spec, rep,
-                     dict(liters=spec, hist=rep, sent=rep))
-        f = jax.shard_map(body, mesh=self.mesh, in_specs=(gb_spec,),
-                          out_specs=out_specs, check_vma=False)
+                                                 gb_shapes))
+        tele_spec = dict(liters=spec, hist=rep, sent=rep)
+        if num_queries is not None:
+            tele_spec["qsteps"] = rep
+        out_specs = (state_spec, rep, tele_spec)
+        f = compat.shard_map(body, mesh=self.mesh, in_specs=(gb_spec,),
+                             out_specs=out_specs)
         return jax.jit(f)
 
     # ---------------- lowering entry point (dry-run / roofline) ----------------
@@ -258,9 +446,8 @@ class GopherEngine:
             st, ib, ch, li, ns = sstep(state, inbox, step)
             return st, ib, ch
 
-        f = jax.shard_map(one_step, mesh=self.mesh,
-                          in_specs=(gb_pspec, state_pspec, spec, P()),
-                          out_specs=(state_pspec, spec, spec),
-                          check_vma=False)
+        f = compat.shard_map(one_step, mesh=self.mesh,
+                             in_specs=(gb_pspec, state_pspec, spec, P()),
+                             out_specs=(state_pspec, spec, spec))
         step_spec = jax.ShapeDtypeStruct((), np.int32)
         return f, (gb_specs, state_shapes, inbox_spec, step_spec)

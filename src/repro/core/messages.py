@@ -70,25 +70,115 @@ def combine_inbox(in_vals: jnp.ndarray, in_idx: jnp.ndarray, v_max: int,
     return inbox  # sum: empty segments are already 0
 
 
-def route_local(outbox_vals: jnp.ndarray, outbox_idx: jnp.ndarray):
+# ---------------- gather-form mailbox (the engine's hot path) ----------------
+# The routing plan is fixed at GoFS build time, so both mailbox endpoints can
+# be expressed as pure gathers through precomputed INVERSE maps (see
+# engine._mailbox_inverse) instead of runtime scatters — scatter is the
+# dominant superstep cost on XLA:CPU and serializes badly under a query axis.
+# A further win: the destination indices never travel — only values are
+# routed, halving mailbox traffic. The scatter forms above are kept as the
+# reference oracles the gather forms are tested against.
+
+_REDUCE = {"min": jnp.min, "max": jnp.max, "sum": jnp.sum}
+
+
+def _at_combine(y, idx, vals, combine: str):
+    ref = y.at[idx]
+    if combine == "min":
+        return ref.min(vals, mode="drop")
+    if combine == "max":
+        return ref.max(vals, mode="drop")
+    return ref.add(vals, mode="drop")
+
+
+def build_outbox_gather(vals: jnp.ndarray, send_mask: jnp.ndarray,
+                        ob_inv: jnp.ndarray, num_parts: int, cap: int,
+                        combine: str) -> jnp.ndarray:
+    """Gather-form outbox for ONE source partition: each of the num_parts*cap
+    slots pulls its remote edge's value (or the identity when empty/masked).
+    The send mask is folded into vals BEFORE the slot gather — masking at
+    r_max size beats masking at slot size, and only one gather runs."""
+    ident = COMBINE_IDENTITY[combine]
+    masked = jnp.where(send_mask, vals, ident)
+    valid = ob_inv != PAD
+    safe = jnp.where(valid, ob_inv, 0)
+    return jnp.where(valid, masked[safe], ident).reshape(num_parts, cap)
+
+
+def build_outbox_gather_batched(vals: jnp.ndarray, send_mask: jnp.ndarray,
+                                ob_inv: jnp.ndarray, num_parts: int, cap: int,
+                                combine: str) -> jnp.ndarray:
+    """Q-query gather-form outbox, QUERY-TRAILING: vals/send are (r_max, Q)
+    and each mailbox slot pulls its edge's contiguous Q-vector in one go —
+    slot index arithmetic amortizes over the whole query batch. Returns
+    (num_parts, cap*Q) with slot-major layout slot*Q + q per pair row."""
+    ident = COMBINE_IDENTITY[combine]
+    masked = jnp.where(send_mask, vals, ident)      # (r_max, Q)
+    valid = ob_inv != PAD
+    safe = jnp.where(valid, ob_inv, 0)
+    out = jnp.where(valid[:, None], masked[safe, :], ident)
+    return out.reshape(num_parts, cap * vals.shape[1])
+
+
+def combine_inbox_gather(in_vals: jnp.ndarray, ib_lo: jnp.ndarray,
+                         ib_hub_idx: jnp.ndarray, ib_hub: jnp.ndarray,
+                         v_max: int, combine: str) -> jnp.ndarray:
+    """Gather-form inbox combine: (num_src, cap) received values -> (v_max,).
+    Each vertex pulls its (two-binned) feed list and reduces it densely; the
+    handful of hub receivers merge back via a tiny hr_max-sized scatter."""
+    ident = COMBINE_IDENTITY[combine]
+    red = _REDUCE[combine]
+    flat = in_vals.reshape(-1)
+
+    def pull(m):
+        valid = m != PAD
+        return jnp.where(valid, flat[jnp.where(valid, m, 0)], ident)
+
+    y = red(pull(ib_lo), axis=-1)                   # (v_max,)
+    yh = red(pull(ib_hub), axis=-1)                 # (hr_max,)
+    idx = jnp.where(ib_hub_idx != PAD, ib_hub_idx, v_max)
+    return _at_combine(y, idx, yh, combine)
+
+
+def combine_inbox_gather_batched(in_vals: jnp.ndarray, ib_lo: jnp.ndarray,
+                                 ib_hub_idx: jnp.ndarray, ib_hub: jnp.ndarray,
+                                 v_max: int, cap: int, combine: str
+                                 ) -> jnp.ndarray:
+    """Q-query gather-form combine, QUERY-TRAILING:
+    (num_src, cap*Q) received -> (v_max, Q) inbox. Each vertex's feed slots
+    pull contiguous Q-vectors; the reduce runs over the feed axis with Q on
+    the lanes."""
+    ident = COMBINE_IDENTITY[combine]
+    red = _REDUCE[combine]
+    num_src = in_vals.shape[0]
+    Q = in_vals.shape[1] // cap
+    flat = in_vals.reshape(num_src * cap, Q)
+
+    def pull(m):
+        valid = m != PAD
+        safe = jnp.where(valid, m, 0)
+        return jnp.where(valid[..., None], flat[safe, :], ident)
+
+    y = red(pull(ib_lo), axis=1)                    # (v_max, m_lo, Q) -> (v_max, Q)
+    yh = red(pull(ib_hub), axis=1)                  # (hr_max, Q)
+    idx = jnp.where(ib_hub_idx != PAD, ib_hub_idx, v_max)
+    return _at_combine(y, idx, yh, combine)
+
+
+def route_local(outbox_vals: jnp.ndarray) -> jnp.ndarray:
     """Local backend: outbox (P_src, P_dst, cap) -> inbox-side (P_dst, P_src, cap).
     A transpose IS the all_to_all when every partition lives on one device."""
-    return outbox_vals.transpose(1, 0, 2), outbox_idx.transpose(1, 0, 2)
+    return outbox_vals.transpose(1, 0, 2)
 
 
-def route_shard_map(outbox_vals: jnp.ndarray, outbox_idx: jnp.ndarray,
-                    axis_name: str):
+def route_shard_map(outbox_vals: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """shard_map backend: per-device block is (v_local_src, P, cap) where
     P = D * v_local. Rearranged so ``all_to_all`` over the device axis delivers
     each device-pair payload, then reassembled as (v_local_dst, P_src, cap)."""
     v, P, cap = outbox_vals.shape
     D = P // v
-
-    def _route(x):
-        # (v_src, D*v_dst, cap) -> (D, v_src, v_dst, cap) -> a2a -> received
-        x = x.reshape(v, D, v, cap).transpose(1, 0, 2, 3)
-        x = jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
-        # now x[d_src, v_src, v_dst, cap] on each destination device
-        return x.reshape(D, v, v, cap).transpose(2, 0, 1, 3).reshape(v, D * v, cap)
-
-    return _route(outbox_vals), _route(outbox_idx)
+    # (v_src, D*v_dst, cap) -> (D, v_src, v_dst, cap) -> a2a -> received
+    x = outbox_vals.reshape(v, D, v, cap).transpose(1, 0, 2, 3)
+    x = jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    # now x[d_src, v_src, v_dst, cap] on each destination device
+    return x.reshape(D, v, v, cap).transpose(2, 0, 1, 3).reshape(v, D * v, cap)

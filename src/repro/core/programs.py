@@ -107,6 +107,8 @@ class PageRankProgram:
     tol: Optional[float] = None         # if set, halt early on L1 delta (BlockRank phase 3)
     spmv_backend: Optional[str] = None
     init_fn: Optional[Callable] = None  # gb -> r0 (BlockRank seeds phase 3 with this)
+    teleport_fn: Optional[Callable] = None  # gb -> (v_max,) personalization
+                                            # distribution; uniform when None
 
     combine = "sum"
 
@@ -128,8 +130,10 @@ class PageRankProgram:
         ones = jnp.ones_like(gb["wgt"])
         pull = ops.semiring_spmv(self._contrib(r, gb), gb["nbr"], ones,
                                  "plus_times", backend=self.spmv_backend)
+        tele = (self.teleport_fn(gb) if self.teleport_fn is not None
+                else 1.0 / self.n_global)
         r_new = jnp.where(
-            vmask, (1.0 - self.damping) / self.n_global + self.damping * (pull + inbox), 0.0)
+            vmask, (1.0 - self.damping) * tele + self.damping * (pull + inbox), 0.0)
         delta = jnp.sum(jnp.abs(r_new - r))
         if self.tol is not None:
             changed = (delta > self.tol) & (step + 1 < self.num_iters)

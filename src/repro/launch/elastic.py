@@ -20,13 +20,12 @@ class MeshPlan:
     axes: Tuple[str, ...]
 
     def make(self):
+        from repro.core import compat
         devs = jax.devices()
         n = 1
         for s in self.shape:
             n *= s
-        return jax.make_mesh(
-            self.shape, self.axes, devices=devs[:n],
-            axis_types=(jax.sharding.AxisType.Auto,) * len(self.shape))
+        return compat.make_mesh(self.shape, self.axes, devices=devs[:n])
 
 
 def plan_mesh(n_chips: int, model_parallel: int = 16,

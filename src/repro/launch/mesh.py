@@ -6,7 +6,8 @@ jax device state (the dry-run sets XLA_FLAGS before any jax import).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,15 +17,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = 1
     for s in shape:
         n *= s
-    devices = jax.devices()[:n]
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def make_mesh(shape, axes):
     """General helper (tests, elastic restarts, graph-engine meshes)."""
-    n = 1
-    for s in shape:
-        n *= s
-    return jax.make_mesh(tuple(shape), tuple(axes), devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes)

@@ -407,10 +407,11 @@ def _moe_block_ep(x, p, cfg, mesh, capacity: Optional[int] = None):
             aux = jax.lax.psum(aux, baxes) / n_sh
         return y.reshape(B_, S_, d), aux
 
-    y, aux = jax.shard_map(
+    from repro.core import compat
+    y, aux = compat.shard_map(
         block, mesh=mesh,
         in_specs=(x_spec, P(None, None), ew_spec, ew_spec, ew_spec),
-        out_specs=(x_spec, P()), check_vma=False)(
+        out_specs=(x_spec, P()))(
         x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
     if e.n_shared:
         y = y + mlp(x.reshape(-1, d)[None], shared_p, cfg.act)[0].reshape(x.shape)

@@ -1,0 +1,24 @@
+"""Gopher Serve: multi-tenant batched graph-query serving.
+
+Turns the one-shot BSP engine into an interactive query service (the paper's
+§6 "low enough latency for interactive analytics" claim, taken literally):
+many concurrent SSSP / BFS / reachability / personalized-PageRank queries are
+batched along a query axis and answered by ONE engine run, fronted by exact
+and landmark caches and a batching planner.
+"""
+from repro.serving.batched import (BatchedPersonalizedPageRank,
+                                   BatchedSemiringProgram,
+                                   gather_query_results, ppr_query_seed,
+                                   reachability_query_init, sssp_query_init)
+from repro.serving.cache import LandmarkCache, ResultCache, choose_landmarks
+from repro.serving.planner import Batch, Query, bucket_size, plan
+from repro.serving.service import GraphQueryService, Response, ServiceStats
+
+__all__ = [
+    "BatchedSemiringProgram", "BatchedPersonalizedPageRank",
+    "sssp_query_init", "reachability_query_init", "ppr_query_seed",
+    "gather_query_results",
+    "ResultCache", "LandmarkCache", "choose_landmarks",
+    "Query", "Batch", "plan", "bucket_size",
+    "GraphQueryService", "Response", "ServiceStats",
+]

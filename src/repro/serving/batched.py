@@ -1,0 +1,211 @@
+"""Query-batched programs: Q concurrent graph queries in one BSP run.
+
+The state pytree and the inbox gain a query axis — per partition the leaves
+are (v_max, Q) instead of (v_max,) — and the partition sweep becomes a
+multi-vector semiring sweep over all Q queries at once. Q queries then share
+ONE graph block, ONE jit cache entry, and ONE set of supersteps (the max
+over queries, not the sum): the per-superstep fixed costs (dispatch, mailbox
+slot addressing, halt all-reduce) are paid once per batch instead of once
+per query.
+
+Layout note: the query axis is TRAILING (minor-most) on device. Every
+mailbox slot and every neighbor gather then pulls one CONTIGUOUS Q-vector —
+index arithmetic amortizes over the batch and Q rides the SIMD/VPU lane
+dimension. Hosts and results still speak "Q first": ``gather_query_results``
+returns (Q, n_global).
+
+Dynamic per-request inputs (SSSP sources, reachability seed sets, PPR
+personalization vectors) arrive as extra graph-block entries (``qinit`` /
+``qseed``), NOT baked into program closures — so the compiled BSP loop is
+byte-identical across request batches of the same bucket size and XLA's
+compile cache is hit every time after the first batch of a bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gofs.formats import PAD, PartitionedGraph
+from repro.kernels import ops
+
+QUERY_INIT_KEY = "qinit"   # (P, v_max, Q) float32 initial semiring state
+QUERY_SEED_KEY = "qseed"   # (P, v_max, Q) float32 PPR personalization vectors
+
+
+def _ew_combine(combine: str, a, b):
+    return jnp.minimum(a, b) if combine == "min" else jnp.maximum(a, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSemiringProgram:
+    """Q-query idempotent-semiring fixpoint: multi-source SSSP / BFS /
+    multi-seed reachability, one query per lane of ``gb[qinit]``.
+
+    Per-query trajectories are EXACTLY those of Q sequential SemiringProgram
+    runs: the local fixpoint, the per-vertex changed flags and therefore the
+    send masks factor over the query axis — queries only share the halt vote,
+    and a quiesced query contributes no messages while the rest finish.
+    """
+    semiring: str                       # min_plus | max_first
+    num_queries: int
+    init_key: str = QUERY_INIT_KEY
+    max_local_iters: Optional[int] = None
+    fixpoint_unroll: int = 2            # sweeps fused per convergence check;
+                                        # overshoot is a no-op for idempotent ⊕
+
+    @property
+    def combine(self) -> str:
+        return "min" if self.semiring == "min_plus" else "max"
+
+    def init(self, gb) -> dict:
+        x0 = gb[self.init_key]                        # (v_max, Q)
+        return {"x": x0,
+                "changed_v": jnp.broadcast_to(gb["vmask"][:, None], x0.shape)}
+
+    def _sweep(self, x, gb):
+        # two-bin multi-vector sweep: Q queries per contiguous gather; ⊕ is
+        # order-insensitive here so results stay bitwise identical to the
+        # scalar ELL sweep
+        y = ops.binned_ell_spmv_multi(x, gb["nbr_lo"], gb["wgt_lo"],
+                                      gb["adj_hub_idx"], gb["adj_hub_nbr"],
+                                      gb["adj_hub_wgt"], self.semiring)
+        return _ew_combine(self.combine, x, y)
+
+    def superstep(self, state, inbox, gb, step):
+        x0 = state["x"]                               # (v_max, Q)
+        vmask = gb["vmask"]
+        x = _ew_combine(self.combine, x0, inbox)
+        max_it = self.max_local_iters
+        if max_it == 1:
+            x2 = self._sweep(x, gb)
+            iters = jnp.int32(1)
+        else:
+            cap = jnp.int32(max_it if max_it is not None else 2**30)
+
+            def cond(c):
+                _, ch, it = c
+                return ch & (it < cap)
+
+            def body(c):
+                xc, _, it = c
+                y = xc
+                for _ in range(self.fixpoint_unroll):
+                    y = self._sweep(y, gb)
+                ch = jnp.any((y != xc) & vmask[:, None])
+                return y, ch, it + self.fixpoint_unroll
+
+            x2, _, iters = jax.lax.while_loop(
+                cond, body, (x, jnp.bool_(True), jnp.int32(0)))
+        changed_v = (x2 != x0) & vmask[:, None]
+        changed_v = jnp.where(step == 0, vmask[:, None], changed_v)
+        changed_q = jnp.any(changed_v, axis=0)        # (Q,)
+        return {"x": x2, "changed_v": changed_v}, changed_q, iters
+
+    def messages(self, state, gb):
+        src = gb["re_src"]
+        valid = src != PAD
+        safe = jnp.where(valid, src, 0)
+        xv = state["x"][safe, :]                      # (r_max, Q)
+        vals = (xv + gb["re_wgt"][:, None] if self.semiring == "min_plus"
+                else xv)
+        send = valid[:, None] & state["changed_v"][safe, :]
+        return vals, send
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedPersonalizedPageRank:
+    """Q personalized-PageRank queries per BSP run (pull Jacobi, fixed
+    ``num_iters`` supersteps — identical per-query math to PageRankProgram
+    with a one-hot teleport). ``gb[qseed]`` holds each query's teleport
+    distribution (one-hot at the seed vertex, or any distribution)."""
+    n_global: int
+    num_queries: int
+    num_iters: int = 30
+    damping: float = 0.85
+    seed_key: str = QUERY_SEED_KEY
+
+    combine = "sum"
+
+    def init(self, gb) -> dict:
+        seed = gb[self.seed_key]                      # (v_max, Q)
+        return {"r": jnp.where(gb["vmask"][:, None], seed, 0.0)}
+
+    def _contrib(self, r, gb):
+        deg = gb["out_degree"].astype(jnp.float32)[:, None]
+        return jnp.where(deg > 0, r / jnp.maximum(deg, 1.0), 0.0)
+
+    def superstep(self, state, inbox, gb, step):
+        vmask = gb["vmask"]
+        r = state["r"]                                # (v_max, Q)
+        # binned multi-vector sweep over UNIT weights (PR pulls rank shares,
+        # not edge weights); padding contributes exact zeros, so this matches
+        # the scalar full-ELL pull
+        pull = ops.binned_ell_spmv_multi(
+            self._contrib(r, gb), gb["nbr_lo"], jnp.ones_like(gb["wgt_lo"]),
+            gb["adj_hub_idx"], gb["adj_hub_nbr"],
+            jnp.ones_like(gb["adj_hub_wgt"]), "plus_times")
+        r_new = jnp.where(
+            vmask[:, None],
+            (1.0 - self.damping) * gb[self.seed_key]
+            + self.damping * (pull + inbox), 0.0)
+        active = step + 1 < self.num_iters
+        changed_q = jnp.broadcast_to(active, (self.num_queries,))
+        return {"r": r_new}, changed_q, jnp.int32(1)
+
+    def messages(self, state, gb):
+        src = gb["re_src"]
+        valid = src != PAD
+        safe = jnp.where(valid, src, 0)
+        vals = self._contrib(state["r"], gb)[safe, :]
+        send = jnp.broadcast_to(valid[:, None], vals.shape)
+        return vals, send
+
+
+# ---------------- host-side query-array builders ----------------
+
+def sssp_query_init(pg: PartitionedGraph,
+                    sources: Sequence[int]) -> np.ndarray:
+    """(P, v_max, Q) initial distances: 0 at each query's source, inf else.
+    Also the BFS init on unit-weight graphs."""
+    Q = len(sources)
+    x0 = np.full((pg.num_parts, pg.v_max, Q), np.inf, np.float32)
+    for q, s in enumerate(sources):
+        x0[int(pg.part_of[s]), int(pg.local_of[s]), q] = 0.0
+    return x0
+
+
+def reachability_query_init(pg: PartitionedGraph,
+                            seed_sets: Sequence[Sequence[int]]) -> np.ndarray:
+    """Multi-seed reachability = BFS from a seed SET per query: every seed
+    starts at 0; a vertex is reachable iff its result is finite."""
+    Q = len(seed_sets)
+    x0 = np.full((pg.num_parts, pg.v_max, Q), np.inf, np.float32)
+    for q, seeds in enumerate(seed_sets):
+        for s in seeds:
+            x0[int(pg.part_of[s]), int(pg.local_of[s]), q] = 0.0
+    return x0
+
+
+def ppr_query_seed(pg: PartitionedGraph,
+                   sources: Sequence[int]) -> np.ndarray:
+    """(P, v_max, Q) one-hot teleport distributions for personalized PR."""
+    Q = len(sources)
+    seed = np.zeros((pg.num_parts, pg.v_max, Q), np.float32)
+    for q, s in enumerate(sources):
+        seed[int(pg.part_of[s]), int(pg.local_of[s]), q] = 1.0
+    return seed
+
+
+def gather_query_results(pg: PartitionedGraph, xq: np.ndarray) -> np.ndarray:
+    """(P, v_max, Q) engine state -> (Q, n_global) in global vertex order."""
+    xq = np.asarray(xq)
+    Q = xq.shape[2]
+    out = np.zeros((Q, pg.n_global), xq.dtype)
+    for p in range(pg.num_parts):
+        m = pg.vmask[p]
+        out[:, pg.global_id[p][m]] = xq[p][m, :].T
+    return out

@@ -1,0 +1,126 @@
+"""Result caches: exact memoization + landmark triangle-inequality bounds.
+
+Two tiers sit in front of the engine:
+
+  ResultCache      exact (Q-query results memoized by (graph, family,
+                   sources)); an LRU over full (n,) result vectors. Repeat
+                   queries — the common case for popular sources — cost a
+                   dict lookup, zero supersteps.
+
+  LandmarkCache    approximate SSSP WITHOUT touching the engine: precompute
+                   exact distance vectors from L landmark vertices (one
+                   batched SSSP run — the serving subsystem bootstraps its
+                   own cache), then answer any source by the triangle
+                   inequality  d(s,t) <= min_l d(s,l) + d(l,t)  (upper bound)
+                   and  d(s,t) >= max_l |d(s,l) - d(l,t)|  (lower bound).
+                   Exact when s or t IS a landmark. Assumes an undirected
+                   graph (d(s,l) = d(l,s) is read off the landmark vector).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.gofs.formats import PartitionedGraph
+
+
+class ResultCache:
+    """LRU memo of exact per-query results keyed by Query.cache_key()."""
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = capacity
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key) -> Optional[np.ndarray]:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value: np.ndarray) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def stats(self) -> dict:
+        return dict(entries=len(self._d), hits=self.hits, misses=self.misses)
+
+
+def choose_landmarks(pg: PartitionedGraph, num: int,
+                     strategy: str = "degree", seed: int = 0) -> np.ndarray:
+    """Pick landmark vertex ids: highest global out-degree (good coverage on
+    powerlaw graphs — hubs sit on many shortest paths) or uniform random."""
+    if strategy == "degree":
+        deg = np.zeros(pg.n_global, np.int64)
+        for p in range(pg.num_parts):
+            m = pg.vmask[p]
+            deg[pg.global_id[p][m]] = pg.out_degree[p][m]
+        return np.argsort(-deg, kind="stable")[:num].astype(np.int64)
+    if strategy == "random":
+        rng = np.random.default_rng(seed)
+        return rng.choice(pg.n_global, size=num, replace=False).astype(np.int64)
+    raise ValueError(f"unknown landmark strategy {strategy!r}")
+
+
+@dataclasses.dataclass
+class LandmarkCache:
+    """L exact landmark distance vectors for one graph; answers approximate
+    SSSP with O(L·n) numpy and no engine run."""
+    landmarks: np.ndarray          # (L,) global vertex ids
+    dist: np.ndarray               # (L, n) exact distances from each landmark
+    queries_answered: int = 0
+
+    @property
+    def num_landmarks(self) -> int:
+        return int(self.landmarks.shape[0])
+
+    @staticmethod
+    def build(pg: PartitionedGraph, num_landmarks: int = 8,
+              strategy: str = "degree", backend: str = "local", mesh=None,
+              landmarks: Optional[Sequence[int]] = None) -> "LandmarkCache":
+        """One batched SSSP run with the landmarks as the query batch."""
+        from repro.core import GopherEngine
+        from repro.serving.batched import (BatchedSemiringProgram,
+                                           gather_query_results,
+                                           sssp_query_init)
+        lm = (np.asarray(landmarks, np.int64) if landmarks is not None
+              else choose_landmarks(pg, num_landmarks, strategy=strategy))
+        prog = BatchedSemiringProgram(semiring="min_plus",
+                                      num_queries=int(lm.shape[0]))
+        eng = GopherEngine(pg, prog, backend=backend, mesh=mesh)
+        state, _ = eng.run_queries(extra={"qinit": sssp_query_init(pg, lm)})
+        return LandmarkCache(landmarks=lm,
+                             dist=gather_query_results(pg, state["x"]))
+
+    def approx_sssp(self, source: int) -> np.ndarray:
+        """(n,) UPPER bounds on d(source, ·): min over landmarks of the
+        two-leg route through each landmark. inf where no landmark reaches
+        both endpoints."""
+        self.queries_answered += 1
+        to_lm = self.dist[:, source]                   # (L,) d(source, l)
+        return np.min(to_lm[:, None] + self.dist, axis=0)
+
+    def lower_bound_sssp(self, source: int) -> np.ndarray:
+        """(n,) LOWER bounds via |d(s,l) - d(l,t)| (finite legs only)."""
+        to_lm = self.dist[:, source]
+        diff = np.abs(to_lm[:, None] - self.dist)
+        diff[~(np.isfinite(to_lm)[:, None] & np.isfinite(self.dist))] = 0.0
+        return np.max(diff, axis=0)
+
+    def bounds(self, s: int, t: int) -> tuple:
+        """(lower, upper) on the single pair distance d(s, t)."""
+        return (float(self.lower_bound_sssp(s)[t]),
+                float(self.approx_sssp(s)[t]))

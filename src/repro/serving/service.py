@@ -1,0 +1,233 @@
+"""Synchronous multi-tenant graph-query serving loop.
+
+Request lifecycle:
+
+    submit()  ->  pending queue (ticket + arrival timestamp)
+    drain()   ->  1. exact-cache pass (ResultCache) — hits never touch the
+                     engine and dedupe identical in-flight queries
+                  2. planner: admit, group by (graph, family), pad to
+                     power-of-two buckets
+                  3. one batched BSP run per batch on a pooled engine —
+                     engines are cached per (graph, family, bucket) and all
+                     engines of a graph share ONE device graph block, so
+                     steady state is: transfer query arrays, hit the jit
+                     cache, run supersteps, gather
+                  4. per-query Response with latency + the query's OWN
+                     convergence superstep (telemetry.query_supersteps)
+
+Aggregate telemetry (QPS, latency percentiles, cache hit rate, bucket fill)
+accumulates in ServiceStats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import GopherEngine, graph_block
+from repro.gofs.formats import PartitionedGraph
+from repro.serving import planner as pl
+from repro.serving.batched import (BatchedPersonalizedPageRank,
+                                   BatchedSemiringProgram,
+                                   gather_query_results, ppr_query_seed,
+                                   reachability_query_init)
+from repro.serving.cache import LandmarkCache, ResultCache
+
+
+@dataclasses.dataclass
+class Request:
+    ticket: int
+    query: pl.Query
+    t_submit: float
+
+
+@dataclasses.dataclass
+class Response:
+    ticket: int
+    query: pl.Query
+    result: Optional[np.ndarray]   # (n,) values in global vertex order
+    cached: bool = False
+    error: Optional[str] = None
+    latency_s: float = 0.0
+    supersteps: int = 0            # the query's own convergence superstep
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    served: int = 0
+    cache_hits: int = 0
+    rejected: int = 0
+    batches: int = 0
+    engine_supersteps: int = 0
+    busy_seconds: float = 0.0
+    # bounded windows: long-running services must not grow without limit
+    lane_fill: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=1024))
+    latencies_s: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=8192))
+
+    def qps(self) -> float:
+        return self.served / self.busy_seconds if self.busy_seconds > 0 else 0.0
+
+    def latency_ms(self, pct: float = 50.0) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), pct) * 1e3)
+
+    def summary(self) -> dict:
+        return dict(served=self.served, cache_hits=self.cache_hits,
+                    rejected=self.rejected, batches=self.batches,
+                    qps=round(self.qps(), 1),
+                    p50_ms=round(self.latency_ms(50), 2),
+                    p99_ms=round(self.latency_ms(99), 2),
+                    mean_fill=round(float(np.mean(self.lane_fill)), 2)
+                    if self.lane_fill else 1.0)
+
+
+class GraphQueryService:
+    """Serves sssp / bfs / reach / ppr queries over registered graphs."""
+
+    def __init__(self, graphs: Dict[str, PartitionedGraph],
+                 backend: str = "local", mesh=None, max_batch: int = 64,
+                 cache_capacity: int = 1024, ppr_iters: int = 30):
+        self.graphs = dict(graphs)
+        self.backend = backend
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.ppr_iters = ppr_iters
+        self.cache = ResultCache(cache_capacity)
+        self.stats = ServiceStats()
+        self.landmark_caches: Dict[str, LandmarkCache] = {}
+        self._gb: Dict[str, dict] = {}
+        self._engines: Dict[tuple, GopherEngine] = {}
+        self._pending: List[Request] = []
+        self._next_ticket = 0
+
+    # ---------------- request intake ----------------
+    def submit(self, kind: str, graph: str, sources) -> int:
+        """Enqueue a query; returns its ticket."""
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append(Request(ticket=t,
+                                     query=pl.Query.make(kind, graph, sources),
+                                     t_submit=time.perf_counter()))
+        return t
+
+    def query(self, kind: str, graph: str, sources) -> Response:
+        """Convenience: submit one query and drain immediately."""
+        t = self.submit(kind, graph, sources)
+        return self.drain()[t]
+
+    # ---------------- scheduler loop ----------------
+    def drain(self) -> Dict[int, Response]:
+        """Serve every pending request; returns {ticket: Response}."""
+        t0 = time.perf_counter()
+        reqs, self._pending = self._pending, []
+        responses: Dict[int, Response] = {}
+
+        # 1. exact-cache pass + dedupe of identical in-flight queries
+        by_key: Dict[tuple, List[Request]] = {}
+        for r in reqs:
+            key = r.query.cache_key()
+            hit = self.cache.get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                responses[r.ticket] = Response(
+                    ticket=r.ticket, query=r.query, result=hit, cached=True,
+                    latency_s=time.perf_counter() - r.t_submit)
+            else:
+                by_key.setdefault(key, []).append(r)
+
+        # 2. plan over unique uncached queries
+        sizes = {name: pg.n_global for name, pg in self.graphs.items()}
+        unique = [rs[0].query for rs in by_key.values()]
+        batches, rejected = pl.plan(unique, sizes, max_batch=self.max_batch)
+        for q, reason in rejected:
+            self.stats.rejected += len(by_key[q.cache_key()])
+            for r in by_key[q.cache_key()]:
+                responses[r.ticket] = Response(
+                    ticket=r.ticket, query=r.query, result=None, error=reason,
+                    latency_s=time.perf_counter() - r.t_submit)
+
+        # 3. one engine run per batch
+        for batch in batches:
+            results, qsteps = self._run_batch(batch)
+            for i, q in enumerate(batch.queries):
+                # own copy — a row VIEW would pin the whole (Q, n) batch
+                # array in the cache for its lifetime
+                res = np.array(results[i])
+                self.cache.put(q.cache_key(), res)
+                for r in by_key[q.cache_key()]:
+                    responses[r.ticket] = Response(
+                        ticket=r.ticket, query=r.query, result=res,
+                        latency_s=time.perf_counter() - r.t_submit,
+                        supersteps=int(qsteps[i]))
+
+        # 4. aggregate telemetry
+        done = [resp for resp in responses.values() if resp.error is None]
+        self.stats.served += len(done)
+        self.stats.latencies_s.extend(resp.latency_s for resp in done)
+        self.stats.busy_seconds += time.perf_counter() - t0
+        return responses
+
+    # ---------------- batch execution ----------------
+    def _run_batch(self, batch: pl.Batch):
+        pg = self.graphs[batch.graph]
+        Q = batch.padded_q
+        # pad lanes replay query 0; their results are sliced away below
+        lanes = batch.queries + [batch.queries[0]] * (Q - len(batch.queries))
+        if batch.family == "ppr":
+            extra = {"qseed": ppr_query_seed(pg, [q.sources[0] for q in lanes])}
+            state_key = "r"
+        else:
+            extra = {"qinit": reachability_query_init(
+                pg, [q.sources for q in lanes])}
+            state_key = "x"
+        eng = self._engine(batch.graph, batch.family, Q)
+        state, tele = eng.run_queries(extra=extra)
+        results = gather_query_results(pg, state[state_key])
+        self.stats.batches += 1
+        self.stats.engine_supersteps += tele.supersteps
+        self.stats.lane_fill.append(batch.fill)
+        return results[:len(batch.queries)], tele.query_supersteps
+
+    def _graph_block(self, graph: str) -> dict:
+        if graph not in self._gb:
+            self._gb[graph] = graph_block(self.graphs[graph])
+        return self._gb[graph]
+
+    def _engine(self, graph: str, family: str, Q: int) -> GopherEngine:
+        key = (graph, family, Q)
+        if key not in self._engines:
+            pg = self.graphs[graph]
+            if family == "ppr":
+                prog = BatchedPersonalizedPageRank(
+                    n_global=pg.n_global, num_queries=Q,
+                    num_iters=self.ppr_iters)
+                max_ss = max(self.ppr_iters + 1, 64)
+            else:
+                prog = BatchedSemiringProgram(semiring="min_plus",
+                                              num_queries=Q)
+                max_ss = 4096
+            self._engines[key] = GopherEngine(
+                pg, prog, backend=self.backend, mesh=self.mesh,
+                max_supersteps=max_ss, gb=self._graph_block(graph))
+        return self._engines[key]
+
+    # ---------------- landmark tier (approximate SSSP, zero supersteps) ----
+    def enable_landmarks(self, graph: str, num_landmarks: int = 8,
+                         strategy: str = "degree") -> LandmarkCache:
+        """Bootstrap the landmark cache with one batched SSSP run."""
+        lc = LandmarkCache.build(self.graphs[graph], num_landmarks=num_landmarks,
+                                 strategy=strategy, backend=self.backend,
+                                 mesh=self.mesh)
+        self.landmark_caches[graph] = lc
+        return lc
+
+    def approx_sssp(self, graph: str, source: int) -> np.ndarray:
+        """Triangle-inequality upper bounds on d(source, ·) — answered from
+        the landmark cache without running the engine."""
+        return self.landmark_caches[graph].approx_sssp(source)

@@ -116,3 +116,28 @@ def test_meta_graph_structure():
     assert adj.shape == (num_meta, num_meta)
     # every valid vertex maps to a meta node
     assert (meta_of[pg.vmask] >= 0).all()
+
+
+def test_store_attribute_subset_lazy_load(tmp_path, monkeypatch):
+    """Paper's per-attribute slice point, enforced at the file level: loading
+    one of two attributes must never OPEN the other attribute's slice file."""
+    g = road_grid(8, 8, seed=7)
+    g.attrs["color"] = np.arange(g.n).astype(np.float32)
+    g.attrs["heat"] = np.linspace(0, 1, g.n).astype(np.float32)
+    st_ = GoFSStore(str(tmp_path))
+    pg = st_.build("g", g, bfs_grow_partition(g, 2, seed=0), 2)
+
+    opened = []
+    real_load = np.load
+
+    def spy_load(path, *a, **kw):
+        opened.append(str(path))
+        return real_load(path, *a, **kw)
+
+    monkeypatch.setattr(np, "load", spy_load)
+    part = st_.load_partition("g", 0, attrs=["color"])
+    assert "attr_color" in part and "attr_heat" not in part
+    np.testing.assert_array_equal(part["attr_color"],
+                                  pg.attrs["color"][0])
+    assert any(p.endswith("attr_color.npz") for p in opened)
+    assert not any("attr_heat" in p for p in opened)

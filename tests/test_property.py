@@ -2,7 +2,10 @@
 import numpy as np
 import pytest
 import scipy.sparse.csgraph as csgraph
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property sweeps need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.algorithms import connected_components, max_vertex, sssp
 from repro.core import meta_diameter

@@ -1,0 +1,281 @@
+"""Gopher Serve: batched query execution must EXACTLY reproduce per-query
+sequential results (both backends), and the planner/cache/service layers
+must behave as specified."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.algorithms import bfs as bfs_single
+from repro.algorithms import sssp as sssp_single
+from repro.core import GopherEngine, PageRankProgram, compat
+from repro.core import messages as msg
+from repro.core.engine import graph_block
+from repro.gofs import bfs_grow_partition, powerlaw_social, road_grid
+from repro.gofs.formats import PAD, partition_graph
+from repro.kernels import ops
+from repro.serving import (BatchedPersonalizedPageRank, BatchedSemiringProgram,
+                           GraphQueryService, LandmarkCache, Query,
+                           ResultCache, bucket_size, gather_query_results,
+                           plan, ppr_query_seed, reachability_query_init,
+                           sssp_query_init)
+
+
+def _gather1(pg, per_part):
+    out = np.zeros(pg.n_global, per_part.dtype)
+    for p in range(pg.num_parts):
+        m = pg.vmask[p]
+        out[pg.global_id[p][m]] = per_part[p][m]
+    return out
+
+
+@pytest.fixture(scope="module")
+def social_pg():
+    g = powerlaw_social(600, m=4, seed=2)
+    return partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
+
+
+@pytest.fixture(scope="module")
+def road_pg():
+    g = road_grid(14, 14, drop_frac=0.05, seed=1)  # unit weights -> BFS-able
+    return partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
+
+
+SOURCES = [0, 7, 113, 200, 341]
+
+
+# ---------------- batched == sequential, both backends ----------------
+
+@pytest.mark.parametrize("backend", ["local", "shard_map"])
+def test_batched_sssp_matches_sequential(social_pg, backend):
+    pg = social_pg
+    mesh = compat.make_mesh((1,), ("parts",)) if backend == "shard_map" else None
+    prog = BatchedSemiringProgram(semiring="min_plus",
+                                  num_queries=len(SOURCES))
+    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh)
+    state, tele = eng.run_queries(
+        extra={"qinit": sssp_query_init(pg, SOURCES)})
+    batched = gather_query_results(pg, state["x"])
+    assert tele.query_supersteps is not None
+    for q, s in enumerate(SOURCES):
+        d_ref, t_ref = sssp_single(pg, s, backend=backend, mesh=mesh)
+        ref = _gather1(pg, d_ref)
+        ref[~np.isfinite(ref)] = np.inf
+        got = batched[q]
+        assert np.array_equal(got, ref), f"query {q} (source {s}) mismatch"
+        # a query's own convergence point never exceeds the batch's
+        assert tele.query_supersteps[q] <= tele.supersteps
+
+
+@pytest.mark.parametrize("backend", ["local", "shard_map"])
+def test_batched_bfs_matches_sequential(road_pg, backend):
+    pg = road_pg
+    mesh = compat.make_mesh((1,), ("parts",)) if backend == "shard_map" else None
+    srcs = [0, 5, 60, 120]
+    prog = BatchedSemiringProgram(semiring="min_plus", num_queries=len(srcs))
+    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh)
+    state, _ = eng.run_queries(extra={"qinit": sssp_query_init(pg, srcs)})
+    batched = gather_query_results(pg, state["x"])
+    for q, s in enumerate(srcs):
+        lvl, _ = bfs_single(pg, s, backend=backend, mesh=mesh)
+        assert np.array_equal(batched[q], _gather1(pg, lvl))
+
+
+@pytest.mark.parametrize("backend", ["local", "shard_map"])
+def test_batched_ppr_matches_sequential(social_pg, backend):
+    """Batched personalized PageRank vs the scalar program with a one-hot
+    teleport — same math, same iteration count, per query."""
+    pg = social_pg
+    mesh = compat.make_mesh((1,), ("parts",)) if backend == "shard_map" else None
+    srcs = [3, 77, 240]
+    iters = 15
+    bp = BatchedPersonalizedPageRank(n_global=pg.n_global,
+                                     num_queries=len(srcs), num_iters=iters)
+    eng = GopherEngine(pg, bp, backend=backend, mesh=mesh, max_supersteps=64)
+    state, tele = eng.run_queries(extra={"qseed": ppr_query_seed(pg, srcs)})
+    batched = gather_query_results(pg, state["r"])
+    assert tele.supersteps == iters
+    for q, s in enumerate(srcs):
+        seed = jnp.asarray(ppr_query_seed(pg, [s])[:, :, 0])
+        prog = PageRankProgram(
+            n_global=pg.n_global, num_iters=iters,
+            init_fn=lambda gb: seed[gb["part_index"]],
+            teleport_fn=lambda gb: seed[gb["part_index"]])
+        st, _ = GopherEngine(pg, prog, backend=backend, mesh=mesh,
+                             max_supersteps=64).run()
+        np.testing.assert_allclose(batched[q], _gather1(pg, st["r"]),
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_multi_seed_reachability_is_min_over_bfs(road_pg):
+    pg = road_pg
+    seeds = (0, 77, 150)
+    prog = BatchedSemiringProgram(semiring="min_plus", num_queries=1)
+    eng = GopherEngine(pg, prog)
+    state, _ = eng.run_queries(
+        extra={"qinit": reachability_query_init(pg, [seeds])})
+    got = gather_query_results(pg, state["x"])[0]
+    refs = np.stack([_gather1(pg, bfs_single(pg, s)[0]) for s in seeds])
+    assert np.array_equal(got, refs.min(0))
+
+
+# ---------------- gather-form mailbox vs scatter oracle ----------------
+
+def test_gather_mailbox_matches_scatter_oracle(social_pg):
+    pg = social_pg
+    gb = graph_block(pg)
+    rng = np.random.default_rng(0)
+    p = 1
+    vals = jnp.asarray(rng.random(pg.r_max).astype(np.float32))
+    send = jnp.asarray(rng.random(pg.r_max) < 0.6)
+    ov_ref, oi_ref = msg.build_outbox(
+        vals, gb["re_src"][p], gb["re_dst_part"][p], gb["re_dst_local"][p],
+        gb["re_slot"][p], send & (gb["re_src"][p] != PAD),
+        num_parts=pg.num_parts, cap=pg.mailbox_cap, combine="min")
+    ov = msg.build_outbox_gather(vals, send, gb["ob_inv"][p],
+                                 num_parts=pg.num_parts, cap=pg.mailbox_cap,
+                                 combine="min")
+    assert np.array_equal(np.asarray(ov), np.asarray(ov_ref))
+    # inbox side: deliver partition p's outbox row d to destination d and
+    # compare the gather combine against the segment-combine oracle
+    for d in range(pg.num_parts):
+        iv = jnp.full((pg.num_parts, pg.mailbox_cap), jnp.inf)
+        iv = iv.at[p].set(ov_ref[d])
+        ii = jnp.full((pg.num_parts, pg.mailbox_cap), PAD, jnp.int32)
+        ii = ii.at[p].set(oi_ref[d])
+        inbox_ref = msg.combine_inbox(iv, ii, v_max=pg.v_max, combine="min")
+        inbox = msg.combine_inbox_gather(iv, gb["ib_lo"][d],
+                                         gb["ib_hub_idx"][d], gb["ib_hub"][d],
+                                         v_max=pg.v_max, combine="min")
+        assert np.array_equal(np.asarray(inbox), np.asarray(inbox_ref))
+
+
+@pytest.mark.parametrize("semiring", ["min_plus", "max_first", "plus_times"])
+def test_binned_sweep_matches_ell(social_pg, semiring):
+    pg = social_pg
+    gb = graph_block(pg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((pg.v_max, 3)).astype(np.float32))
+    for p in range(pg.num_parts):
+        got = ops.binned_ell_spmv_multi(
+            x, gb["nbr_lo"][p], gb["wgt_lo"][p], gb["adj_hub_idx"][p],
+            gb["adj_hub_nbr"][p], gb["adj_hub_wgt"][p], semiring)
+        for q in range(3):
+            ref = ops.semiring_spmv(x[:, q], gb["nbr"][p], gb["wgt"][p],
+                                    semiring, backend="jnp")
+            np.testing.assert_allclose(np.asarray(got[:, q]), np.asarray(ref),
+                                       rtol=1e-6, atol=0)
+
+
+# ---------------- planner ----------------
+
+def test_bucket_sizes():
+    assert [bucket_size(n) for n in (1, 2, 3, 5, 9, 33)] == [1, 2, 4, 8, 16, 64]
+    assert bucket_size(100, max_batch=64) == 64
+
+
+def test_planner_groups_and_rejects():
+    graphs = {"g": 100, "h": 50}
+    qs = [Query.make("sssp", "g", 1), Query.make("sssp", "g", 2),
+          Query.make("bfs", "g", 3), Query.make("reach", "g", (4, 5)),
+          Query.make("ppr", "h", 6), Query.make("sssp", "MISSING", 0),
+          Query.make("sssp", "g", 999), Query.make("unknown", "g", 1)]
+    batches, rejected = plan(qs, graphs, max_batch=8)
+    assert len(rejected) == 3
+    keys = {(b.graph, b.family): len(b.queries) for b in batches}
+    # sssp + bfs + reach are one min_plus program -> one traversal batch
+    assert keys == {("g", "traversal"): 4, ("h", "ppr"): 1}
+    for b in batches:
+        assert b.padded_q == bucket_size(len(b.queries), 8)
+
+
+def test_planner_splits_oversize_groups():
+    graphs = {"g": 1000}
+    qs = [Query.make("sssp", "g", i) for i in range(11)]
+    batches, rejected = plan(qs, graphs, max_batch=4)
+    assert not rejected
+    assert [len(b.queries) for b in batches] == [4, 4, 3]
+    assert [b.padded_q for b in batches] == [4, 4, 4]
+
+
+# ---------------- caches ----------------
+
+def test_result_cache_lru():
+    c = ResultCache(capacity=2)
+    c.put("a", np.zeros(1)); c.put("b", np.ones(1))
+    assert c.get("a") is not None          # refresh 'a'
+    c.put("c", np.ones(1))                 # evicts 'b'
+    assert c.get("b") is None
+    assert c.get("a") is not None and c.get("c") is not None
+    assert c.stats()["entries"] == 2
+
+
+def test_landmark_cache_bounds(road_pg):
+    pg = road_pg
+    lc = LandmarkCache.build(pg, num_landmarks=6, strategy="degree")
+    src = 30
+    exact = _gather1(pg, sssp_single(pg, src)[0])
+    upper = lc.approx_sssp(src)
+    lower = lc.lower_bound_sssp(src)
+    finite = np.isfinite(exact)
+    assert np.all(upper[finite] >= exact[finite] - 1e-5)
+    assert np.all(lower[finite] <= exact[finite] + 1e-5)
+    # exact when the source IS a landmark
+    lm = int(lc.landmarks[0])
+    np.testing.assert_allclose(lc.approx_sssp(lm),
+                               _gather1(pg, sssp_single(pg, lm)[0]),
+                               atol=1e-5)
+
+
+# ---------------- service ----------------
+
+def test_service_end_to_end(social_pg, road_pg):
+    svc = GraphQueryService({"social": social_pg, "road": road_pg},
+                            max_batch=8)
+    for s in (1, 50, 200):
+        svc.submit("sssp", "social", s)
+    svc.submit("bfs", "road", 0)
+    svc.submit("reach", "road", (0, 100))
+    svc.submit("ppr", "social", 9)
+    out = svc.drain()
+    assert len(out) == 6
+    for resp in out.values():
+        assert resp.error is None
+        assert resp.result is not None
+        assert resp.latency_s > 0
+    d = next(r for r in out.values()
+             if r.query.kind == "sssp" and r.query.sources == (50,))
+    assert np.array_equal(d.result, _gather1(social_pg,
+                                             sssp_single(social_pg, 50)[0]))
+    # repeat -> exact-cache hit, no extra engine batch
+    batches_before = svc.stats.batches
+    again = svc.query("sssp", "social", 50)
+    assert again.cached and svc.stats.batches == batches_before
+    assert np.array_equal(again.result, d.result)
+    # rejection paths: out-of-range source and unknown kind (the latter must
+    # reject at admission, not crash the cache pass)
+    bad = svc.query("sssp", "social", 10**6)
+    assert bad.error is not None and bad.result is None
+    bad2 = svc.query("walk", "social", 0)
+    assert bad2.error is not None and "unknown query kind" in bad2.error
+    # telemetry accumulated
+    s = svc.stats.summary()
+    assert s["served"] == 7 and s["cache_hits"] == 1 and s["qps"] > 0
+
+
+def test_service_dedupes_identical_inflight(social_pg):
+    svc = GraphQueryService({"social": social_pg}, max_batch=8)
+    t1 = svc.submit("sssp", "social", 5)
+    t2 = svc.submit("sssp", "social", 5)
+    out = svc.drain()
+    assert np.array_equal(out[t1].result, out[t2].result)
+    assert svc.stats.batches == 1
+
+
+def test_telemetry_hist_truncated(social_pg):
+    """Regression: changed_hist must be cut to the realized superstep count,
+    not the max_supersteps-length zero-padded buffer."""
+    dist, tele = sssp_single(social_pg, 0)
+    assert tele.changed_hist.shape == (tele.supersteps,)
+    # every superstep but the final quiescence-confirming one saw changes
+    assert np.all(tele.changed_hist[:-1] > 0)

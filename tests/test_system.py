@@ -123,8 +123,8 @@ def test_superstep_reduction_paper_claim():
 def test_shard_map_backend_matches_local():
     g = road_grid(12, 12, drop_frac=0.06, seed=8)
     pg = partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
-    mesh = jax.make_mesh((1,), ("parts",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core import compat
+    mesh = compat.make_mesh((1,), ("parts",))
     lab0, ncc0, t0 = connected_components(pg, mode="subgraph", backend="local")
     lab1, ncc1, t1 = connected_components(pg, mode="subgraph",
                                           backend="shard_map", mesh=mesh)
