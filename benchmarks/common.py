@@ -1,7 +1,9 @@
 """Shared benchmark scaffolding: the paper's three dataset analogues at
-CPU-benchmark scale, timing helpers, CSV emission."""
+CPU-benchmark scale, timing helpers, CSV emission + BENCH_*.json recording."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -38,8 +40,24 @@ def timed(fn, *args, repeats: int = 1, warmup: bool = False, **kw):
     return out, best
 
 
+RESULTS = []        # every emit() lands here so drivers can write BENCH json
+
+
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.0f},{derived}")
+    RESULTS.append(dict(name=name, us_per_call=round(seconds * 1e6),
+                        derived=derived))
+
+
+def write_bench_json(suite: str, payload=None) -> str:
+    """Write BENCH_<suite>.json at the repo root (the perf-trajectory record
+    the roadmap tracks). ``payload`` defaults to the rows emit() collected
+    since process start."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(payload if payload is not None else RESULTS, f, indent=1)
+    return path
 
 
 _pg_cache = {}

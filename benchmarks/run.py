@@ -7,6 +7,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
     fig5_*    straggler/skew distribution + partitioner fix (paper Fig 5, §7)
     blockrank_* BlockRank vs classic PageRank supersteps (paper §5.3)
     serving_* batched multi-query serving QPS vs sequential (Gopher Serve)
+    incremental_* delta restart vs full recompute (Gopher Delta)
+
+Every emitted row is also recorded to BENCH_paper_suite.json at the repo
+root (plus BENCH_incremental.json from the incremental bench) so the perf
+trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -25,8 +30,10 @@ def _blockrank():
 
 
 def main() -> None:
-    from benchmarks import (bench_goffish_vs_vertex, bench_loading,
-                            bench_serving, bench_straggler, bench_supersteps)
+    from benchmarks import (bench_goffish_vs_vertex, bench_incremental,
+                            bench_loading, bench_serving, bench_straggler,
+                            bench_supersteps)
+    from benchmarks.common import write_bench_json
     print("name,us_per_call,derived")
     bench_goffish_vs_vertex.run()
     bench_loading.run()
@@ -34,6 +41,8 @@ def main() -> None:
     bench_straggler.run()
     _blockrank()
     bench_serving.run()
+    bench_incremental.run()
+    print(f"# wrote {write_bench_json('paper_suite')}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
-"""Paper §5 algorithms, each in sub-graph centric AND vertex centric form."""
+"""Paper §5 algorithms, each in sub-graph centric AND vertex centric form,
+plus incremental (delta-restart) variants of the monotone ones."""
 from repro.algorithms.connected_components import connected_components
 from repro.algorithms.sssp import sssp
 from repro.algorithms.pagerank import blockrank, pagerank
 from repro.algorithms.bfs import bfs
 from repro.algorithms.max_vertex import max_vertex
+from repro.algorithms.incremental import (incremental_bfs,
+                                          incremental_connected_components,
+                                          incremental_sssp)
 
 __all__ = ["connected_components", "sssp", "pagerank", "blockrank", "bfs",
-           "max_vertex"]
+           "max_vertex", "incremental_sssp", "incremental_bfs",
+           "incremental_connected_components"]

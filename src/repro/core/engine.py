@@ -39,6 +39,26 @@ from repro.gofs.formats import PAD, PartitionedGraph
 _GB_FIELDS = ["nbr", "wgt", "vmask", "out_degree", "global_id", "sg_id",
               "re_src", "re_wgt", "re_dst_part", "re_dst_local", "re_slot"]
 
+# the vmapped partition axis gets a collective name so programs can take
+# GLOBAL reductions (PageRank dangling mass / L1 halt) with a plain psum —
+# the engine hands each program the axes it runs under (this one, plus the
+# mesh axis on the shard_map backend)
+_VPART_AXIS = "vparts"
+
+# compiled BSP loops shared ACROSS engine instances (see _runner); FIFO-bounded
+# so a churny fleet can't pin unbounded trace closures
+_RUNNER_CACHE: dict = {}
+_RUNNER_CACHE_CAP = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class _PgScalars:
+    """The only pg fields the compiled BSP loop reads — cached runners hold
+    these instead of a full PartitionedGraph (see _runner)."""
+    num_parts: int
+    v_max: int
+    mailbox_cap: int
+
 
 @dataclasses.dataclass
 class Telemetry:
@@ -170,7 +190,6 @@ class GopherEngine:
         self._gb = gb                # cached device-side graph block; pass a
                                      # shared one so many engines (a serving
                                      # fleet) reuse a single device copy
-        self._runner_cache = {}      # (backend, Q) -> compiled BSP loop
 
     def _graph_block(self):
         """The device graph block, built once per engine — every query batch
@@ -192,16 +211,38 @@ class GopherEngine:
         routing is identical on both backends.
         """
         prog = self.program
+        Q = num_queries
+        axes = ((_VPART_AXIS,) if self.backend == "local"
+                else (_VPART_AXIS, self.axis_name))
+
+        exchange = self.make_exchange(gb, num_queries=Q)
+
+        def sstep(state, inbox, step):
+            new_state, changed, liters = jax.vmap(
+                lambda s, i, g: prog.superstep(s, i, g, step, axes=axes),
+                in_axes=(0, 0, 0), axis_name=_VPART_AXIS)(state, inbox, gb)
+            inbox, nsent = exchange(new_state)
+            return new_state, inbox, changed, liters, nsent
+
+        return sstep
+
+    def make_exchange(self, gb, num_queries: Optional[int] = None):
+        """The mailbox half of a superstep: state -> (inbox, nsent). Split
+        out so the BSP loop can PRIME the first inbox from the INITIAL state
+        — without priming, superstep 0 computes with an empty inbox and
+        treats every remote in-edge as contributing the ⊕-identity. For
+        idempotent programs that only delays information one superstep, but
+        for PageRank it silently dropped all remote mass from the first
+        Jacobi iteration (an error that decays only as damping^k)."""
+        prog = self.program
         cap = self.pg.mailbox_cap
         v_max = self.pg.v_max
         combine = prog.combine
         num_parts = self.pg.num_parts
         Q = num_queries
 
-        def sstep(state, inbox, step):
-            new_state, changed, liters = jax.vmap(
-                prog.superstep, in_axes=(0, 0, 0, None))(state, inbox, gb, step)
-            vals, send = jax.vmap(prog.messages)(new_state, gb)
+        def exchange(state):
+            vals, send = jax.vmap(prog.messages)(state, gb)
             # gather-form mailbox: slots PULL through the precomputed inverse
             # routing plan — no runtime scatter, and only values travel
             if Q is None:
@@ -226,9 +267,9 @@ class GopherEngine:
             inbox = jax.vmap(comb)(iv, gb["ib_lo"], gb["ib_hub_idx"],
                                    gb["ib_hub"])
             nsent = jnp.sum(send).astype(jnp.int32)
-            return new_state, inbox, changed, liters, nsent
+            return inbox, nsent
 
-        return sstep
+        return exchange
 
     def _run_batched(self, gb, num_queries: Optional[int] = None):
         """The full BSP loop over a partition batch. Runs as-is on the local
@@ -240,16 +281,17 @@ class GopherEngine:
         """
         prog = self.program
         Q = num_queries
-        ident = msg.COMBINE_IDENTITY[prog.combine]
         sstep = self.make_superstep(gb, num_queries=Q)
         p_local = gb["vmask"].shape[0]
         state0 = jax.vmap(prog.init)(gb)
-        ib_shape = ((p_local, self.pg.v_max) if Q is None
-                    else (p_local, self.pg.v_max, Q))
-        inbox0 = jnp.full(ib_shape, ident, jnp.float32)
+        # prime the mailbox with the INITIAL state's messages so superstep 0
+        # computes against a consistent inbox (see make_exchange)
+        inbox0, nsent0 = self.make_exchange(gb, num_queries=Q)(state0)
+        if self.backend == "shard_map":
+            nsent0 = jax.lax.psum(nsent0, self.axis_name)
         tele0 = dict(liters=jnp.zeros((p_local,), jnp.int32),
                      hist=jnp.zeros((self.max_supersteps,), jnp.int32),
-                     sent=jnp.int32(0))
+                     sent=nsent0)
         if Q is not None:
             tele0["qsteps"] = jnp.zeros((Q,), jnp.int32)
 
@@ -290,15 +332,25 @@ class GopherEngine:
 
     # ---------------- drivers ----------------
     def run(self, checkpointer=None, checkpoint_every: int = 0,
-            resume: bool = False):
+            resume: bool = False, extra: Optional[dict] = None):
         """Run to quiescence. With a `training.checkpoint.Checkpointer` and
         checkpoint_every=N, the BSP loop snapshots (state, inbox, superstep)
         every N supersteps and can restart from the last committed snapshot
         after a failure (BSP makes the cut trivially consistent — paper §4.2's
-        synchronization points ARE the recovery lines)."""
+        synchronization points ARE the recovery lines).
+
+        ``extra`` carries per-run dynamic (P, ...) graph-block entries — e.g.
+        ``x0`` / ``frontier0`` for an incremental resume (SemiringProgram
+        with resume=True) — without invalidating the shared cached block.
+        """
         if checkpointer is not None and checkpoint_every > 0:
+            assert not extra, "checkpointed runs don't take extra blocks yet"
             return self._run_checkpointed(checkpointer, checkpoint_every, resume)
         gb = self._graph_block()
+        if extra:
+            gb = dict(gb)
+            for k, v in extra.items():
+                gb[k] = jnp.asarray(v)
         state, steps, tele = self._runner(gb_example=gb)(gb)
         return jax.tree.map(np.asarray, state), self._telemetry(steps, tele)
 
@@ -334,44 +386,80 @@ class GopherEngine:
         )
 
     def _runner(self, num_queries: Optional[int] = None, gb_example=None):
-        """The compiled BSP loop, cached per (backend, Q, gb keys) so
-        repeated serving batches hit the same jit entry instead of
-        re-tracing. The gb key set is part of the cache key because the
-        shard_map in_specs are baked from the first call's block structure."""
-        key = (self.backend, num_queries,
-               frozenset(gb_example) if gb_example is not None else None)
-        if key not in self._runner_cache:
+        """The compiled BSP loop, cached so repeated runs hit the same jit
+        entry instead of re-tracing.
+
+        The cache is MODULE-level and keyed on everything the trace depends
+        on — program (frozen dataclass; init_fn compares by identity),
+        backend/mesh, loop bounds, partition-batch shapes, and the gb
+        entry signature (shard_map in_specs are baked from the block
+        structure) — so SHORT-LIVED ENGINES SHARE COMPILED LOOPS: a
+        temporal-serving fleet that rebuilds its engines after every
+        apply_delta re-enters the compiled loop as long as the delta didn't
+        change any padded shape, instead of paying a full XLA compile per
+        graph version."""
+        gb_sig = (tuple(sorted((k, v.shape, str(v.dtype))
+                               for k, v in gb_example.items()))
+                  if gb_example is not None else None)
+        key = (self.program, self.backend, num_queries, self.max_supersteps,
+               self.axis_name, self.mesh, self.pg.num_parts, self.pg.v_max,
+               self.pg.mailbox_cap, gb_sig)
+        cached = _RUNNER_CACHE.get(key)
+        if cached is None:
+            # build the runner on a DETACHED engine holding only the scalars
+            # the trace reads (graph data flows in through the gb argument):
+            # a cached closure over `self` would pin this engine's device
+            # graph block — and its host pg — for the cache entry's lifetime
+            slim = GopherEngine.__new__(GopherEngine)
+            slim.pg = _PgScalars(num_parts=self.pg.num_parts,
+                                 v_max=self.pg.v_max,
+                                 mailbox_cap=self.pg.mailbox_cap)
+            slim.program = self.program
+            slim.backend = self.backend
+            slim.mesh = self.mesh
+            slim.axis_name = self.axis_name
+            slim.max_supersteps = self.max_supersteps
+            slim._gb = None
             if self.backend == "local":
-                self._runner_cache[key] = jax.jit(functools.partial(
-                    self._run_batched, num_queries=num_queries))
+                cached = jax.jit(functools.partial(
+                    slim._run_batched, num_queries=num_queries))
             else:
-                self._runner_cache[key] = self._sharded_fn(
+                cached = slim._sharded_fn(
                     num_queries=num_queries, gb_example=gb_example)
-        return self._runner_cache[key]
+            if len(_RUNNER_CACHE) >= _RUNNER_CACHE_CAP:
+                _RUNNER_CACHE.pop(next(iter(_RUNNER_CACHE)))
+            _RUNNER_CACHE[key] = cached
+        return cached
 
     def _run_checkpointed(self, ck, every: int, resume: bool):
         """Chunked BSP: jitted inner loop of <= `every` supersteps, snapshot
-        between chunks (local backend)."""
+        between chunks (local backend). Reuses the engine's cached graph
+        block — a checkpointed run must not build a second device copy —
+        and carries the same telemetry counters as a normal run (after a
+        resume, counters cover the current process's supersteps; the hist
+        slots before the restored step are zero)."""
         assert self.backend == "local", "checkpointed runs use the local backend"
-        gb = graph_block(self.pg)
+        gb = self._graph_block()
         prog = self.program
-        ident = msg.COMBINE_IDENTITY[prog.combine]
         sstep = self.make_superstep(gb)
 
         @jax.jit
-        def chunk(state, inbox, step0):
+        def chunk(state, inbox, step0, tele):
             def cond(c):
                 _, _, step, done, _ = c
                 return (~done) & (step < step0 + every) & (step < self.max_supersteps)
 
             def body(c):
-                state, inbox, step, _, liters = c
-                state, inbox, changed, li, _ = sstep(state, inbox, step)
-                return state, inbox, step + 1, ~jnp.any(changed), liters + li
+                state, inbox, step, _, tele = c
+                state, inbox, changed, li, nsent = sstep(state, inbox, step)
+                nchanged = jnp.sum(changed.astype(jnp.int32))
+                tele = dict(liters=tele["liters"] + li,
+                            hist=tele["hist"].at[step].set(nchanged),
+                            sent=tele["sent"] + nsent)
+                return state, inbox, step + 1, ~jnp.any(changed), tele
 
             return jax.lax.while_loop(
-                cond, body, (state, inbox, step0, jnp.bool_(False),
-                             jnp.zeros((self.pg.num_parts,), jnp.int32)))
+                cond, body, (state, inbox, step0, jnp.bool_(False), tele))
 
         if resume and ck.latest_step() is not None:
             snap_like = {
@@ -384,19 +472,18 @@ class GopherEngine:
             step = jnp.int32(step)
         else:
             state = jax.vmap(prog.init)(gb)
-            inbox = jnp.full((self.pg.num_parts, self.pg.v_max), ident, jnp.float32)
+            inbox, nsent0 = jax.jit(self.make_exchange(gb))(state)
             step = jnp.int32(0)
 
-        total_liters = np.zeros((self.pg.num_parts,), np.int64)
+        tele = dict(liters=jnp.zeros((self.pg.num_parts,), jnp.int32),
+                    hist=jnp.zeros((self.max_supersteps,), jnp.int32),
+                    sent=(nsent0 if int(step) == 0 else jnp.int32(0)))
         done = False
         while not done and int(step) < self.max_supersteps:
-            state, inbox, step, done_flag, liters = chunk(state, inbox, step)
-            total_liters += np.asarray(liters)
+            state, inbox, step, done_flag, tele = chunk(state, inbox, step, tele)
             done = bool(done_flag)
             ck.save({"state": state, "inbox": inbox}, int(step))
-        tele = Telemetry(supersteps=int(step), local_iters=total_liters,
-                         changed_hist=np.zeros(0, np.int32), messages_sent=-1)
-        return jax.tree.map(np.asarray, state), tele
+        return jax.tree.map(np.asarray, state), self._telemetry(step, tele)
 
     def _sharded_fn(self, num_queries: Optional[int] = None, gb_example=None):
         spec = P(self.axis_name)

@@ -36,55 +36,98 @@ def _ew_combine(combine: str, a, b):
 
 @dataclasses.dataclass(frozen=True)
 class SemiringProgram:
-    """Idempotent-semiring fixpoint programs: CC, SSSP, BFS, MaxVertex."""
+    """Idempotent-semiring fixpoint programs: CC, SSSP, BFS, MaxVertex.
+
+    Frontier-driven (paper §4.2 VoteToHalt, done properly): the state carries
+    an active-frontier mask seeded by ``init`` — all of ``vmask`` on a cold
+    start, ``gb["frontier0"]`` on an incremental resume — and the local
+    fixpoint is a *masked* sweep gated on it. A partition whose frontier is
+    empty runs ZERO sweep iterations that superstep (its while-loop condition
+    is false on entry) instead of recomputing everything to discover nothing
+    changed; within an active partition, rows with no active in-neighbor cost
+    ~0 (kernels.semiring_spmv_frontier). For idempotent ⊕ the masked fixpoint
+    is bitwise identical to the unmasked one.
+
+    ``resume=True`` starts from a previous fixpoint: ``gb["x0"]`` is the prior
+    state and ``gb["frontier0"]`` the dirty seed set (see gofs.temporal /
+    algorithms.incremental); both arrive via ``GopherEngine.run(extra=...)``.
+    """
     semiring: str                       # min_plus | max_first
-    init_fn: Callable                   # gb -> x0 (v_max,)
+    init_fn: Optional[Callable] = None  # gb -> x0 (v_max,); unused when resume
     max_local_iters: Optional[int] = None
     spmv_backend: Optional[str] = None
     fixpoint_unroll: int = 1            # sweeps fused per loop iteration (perf knob)
+    resume: bool = False                # start from gb["x0"] / gb["frontier0"]
 
     @property
     def combine(self) -> str:
         return "min" if self.semiring == "min_plus" else "max"
 
     def init(self, gb) -> dict:
+        # state: x — vertex values; changed_v — the send set (messages gate on
+        # it); frontier — vertices whose local consequences are NOT yet
+        # settled (the seed at step 0; afterwards only nonempty when a
+        # bounded fixpoint hit max_local_iters mid-propagation)
+        if self.resume:
+            seed = gb["frontier0"] & gb["vmask"]
+            return {"x": gb["x0"], "changed_v": seed, "frontier": seed}
         x0 = self.init_fn(gb)
-        return {"x": x0, "changed_v": gb["vmask"]}
+        return {"x": x0, "changed_v": gb["vmask"], "frontier": gb["vmask"]}
 
     def _sweep(self, x, gb):
         y = ops.semiring_spmv(x, gb["nbr"], gb["wgt"], self.semiring,
                               backend=self.spmv_backend)
         return _ew_combine(self.combine, x, y)
 
-    def superstep(self, state, inbox, gb, step):
+    def _masked_sweep(self, x, f, gb):
+        """One frontier-masked relaxation: recompute only rows with an active
+        in-neighbor; the next frontier is the rows that actually changed."""
+        y, _ = ops.semiring_spmv_frontier(x, f, gb["nbr"], gb["wgt"],
+                                          self.semiring,
+                                          backend=self.spmv_backend)
+        x2 = _ew_combine(self.combine, x, y)
+        return x2, (x2 != x) & gb["vmask"]
+
+    def superstep(self, state, inbox, gb, step, axes=()):
         x0 = state["x"]
         vmask = gb["vmask"]
         x = _ew_combine(self.combine, x0, inbox)
+        improved = (x != x0) & vmask        # vertices the mailbox moved
+        # active set = carried frontier (the seed at step 0; leftover work
+        # when a bounded fixpoint hit its cap) ∪ inbox improvements. A
+        # quiesced partition enters the while loop with f0 empty and runs
+        # ZERO sweeps this superstep.
+        f0 = state["frontier"] | improved
         max_it = self.max_local_iters
         if max_it == 1:
+            # vertex-centric baseline (Giraph): one full sweep, unmasked
             x2 = self._sweep(x, gb)
             iters = jnp.int32(1)
+            f_left = jnp.zeros_like(vmask)
         else:
             cap = jnp.int32(max_it if max_it is not None else 2**30)
 
             def cond(c):
-                _, ch, it = c
-                return ch & (it < cap)
+                _, f, it = c
+                return jnp.any(f) & (it < cap)
 
             def body(c):
-                xc, _, it = c
-                y = xc
+                xc, f, it = c
                 for _ in range(self.fixpoint_unroll):
-                    y = self._sweep(y, gb)
-                ch = jnp.any((y != xc) & vmask)
-                return y, ch, it + self.fixpoint_unroll
+                    xc, f = self._masked_sweep(xc, f, gb)
+                return xc, f, it + self.fixpoint_unroll
 
-            x2, _, iters = jax.lax.while_loop(cond, body, (x, jnp.bool_(True), jnp.int32(0)))
+            x2, f_left, iters = jax.lax.while_loop(cond, body,
+                                                   (x, f0, jnp.int32(0)))
+        # the send set: vertices with news this superstep. The SEED frontier
+        # needs no step-0 override here — the engine PRIMES the first inbox
+        # from the init state's messages (gated on init's changed_v = seed),
+        # so seed values, including incremental boundary announcements, were
+        # already delivered before this superstep ran.
         changed_v = (x2 != x0) & vmask
-        # superstep 1: everything counts as changed so initial messages flow
-        changed_v = jnp.where(step == 0, vmask, changed_v)
         changed = jnp.any(changed_v)
-        return {"x": x2, "changed_v": changed_v}, changed, iters
+        return {"x": x2, "changed_v": changed_v, "frontier": f_left}, \
+            changed, iters
 
     def messages(self, state, gb):
         src = gb["re_src"]
@@ -100,11 +143,21 @@ class SemiringProgram:
 class PageRankProgram:
     """Classic PageRank (paper §5.3): one Jacobi iteration per superstep,
     fixed ``num_iters`` supersteps (the paper runs 30), pull formulation.
-    Remote in-edges deliver contributions through the mailbox (⊕ = sum)."""
+    Remote in-edges deliver contributions through the mailbox (⊕ = sum).
+
+    Dangling vertices (global out-degree 0) cannot forward rank through
+    edges; their mass is redistributed by the teleport distribution every
+    iteration — the standard G = d(A + dangling·teleᵀ) + (1-d)·1·teleᵀ
+    formulation — so ranks sum to 1 on graphs with sinks. The dangling mass
+    and the ``tol`` halt criterion are GLOBAL sums: ``axes`` names the
+    collective axes the engine runs this program under (the vmap partition
+    axis, plus the mesh axis on shard_map), so every partition sees the same
+    totals and the early-halt decision is graph-wide, not per-partition.
+    """
     n_global: int
     num_iters: int = 30
     damping: float = 0.85
-    tol: Optional[float] = None         # if set, halt early on L1 delta (BlockRank phase 3)
+    tol: Optional[float] = None         # if set, halt early on GLOBAL L1 delta
     spmv_backend: Optional[str] = None
     init_fn: Optional[Callable] = None  # gb -> r0 (BlockRank seeds phase 3 with this)
     teleport_fn: Optional[Callable] = None  # gb -> (v_max,) personalization
@@ -124,7 +177,7 @@ class PageRankProgram:
         deg = gb["out_degree"].astype(jnp.float32)
         return jnp.where(deg > 0, r / jnp.maximum(deg, 1.0), 0.0)
 
-    def superstep(self, state, inbox, gb, step):
+    def superstep(self, state, inbox, gb, step, axes=()):
         vmask = gb["vmask"]
         r = state["r"]
         ones = jnp.ones_like(gb["wgt"])
@@ -132,9 +185,16 @@ class PageRankProgram:
                                  "plus_times", backend=self.spmv_backend)
         tele = (self.teleport_fn(gb) if self.teleport_fn is not None
                 else 1.0 / self.n_global)
+        dangling = jnp.sum(jnp.where(vmask & (gb["out_degree"] == 0), r, 0.0))
+        if axes:
+            dangling = jax.lax.psum(dangling, axes)
         r_new = jnp.where(
-            vmask, (1.0 - self.damping) * tele + self.damping * (pull + inbox), 0.0)
+            vmask,
+            (1.0 - self.damping) * tele
+            + self.damping * (pull + inbox + dangling * tele), 0.0)
         delta = jnp.sum(jnp.abs(r_new - r))
+        if axes:
+            delta = jax.lax.psum(delta, axes)
         if self.tol is not None:
             changed = (delta > self.tol) & (step + 1 < self.num_iters)
         else:

@@ -5,14 +5,17 @@ slice-bundle per partition (topology slice + attribute slices), so a worker
 loads exactly its partition with zero network movement, mirroring the paper's
 GoFS design (write-once / read-many, per-attribute lazy slices).
 """
-from repro.gofs.formats import Graph, PartitionedGraph, ell_from_csr
+from repro.gofs.formats import (Graph, PartitionedGraph, dedupe_edges_min,
+                                ell_from_csr)
 from repro.gofs.generators import road_grid, powerlaw_social, trace_star
 from repro.gofs.partition import hash_partition, bfs_grow_partition, subgraph_balanced_partition
 from repro.gofs.store import GoFSStore
+from repro.gofs.temporal import (DeltaResult, EdgeDelta, TemporalStore,
+                                 apply_delta)
 
 __all__ = [
-    "Graph", "PartitionedGraph", "ell_from_csr",
+    "Graph", "PartitionedGraph", "ell_from_csr", "dedupe_edges_min",
     "road_grid", "powerlaw_social", "trace_star",
     "hash_partition", "bfs_grow_partition", "subgraph_balanced_partition",
-    "GoFSStore",
+    "GoFSStore", "TemporalStore", "EdgeDelta", "DeltaResult", "apply_delta",
 ]

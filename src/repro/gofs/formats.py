@@ -17,6 +17,30 @@ import scipy.sparse as sp
 PAD = -1  # sentinel neighbor index
 
 
+def dedupe_edges_min(n: int, src: np.ndarray, dst: np.ndarray,
+                     wgt: np.ndarray):
+    """Collapse parallel (src, dst) edges to ONE edge keeping the MIN weight.
+
+    This is the repo-wide duplicate-edge policy: under distance semantics
+    (SSSP/BFS/reachability — the dominant workloads) the cheapest parallel
+    edge dominates every shortest path, so min is the only lossless choice;
+    summing (what a raw CSR constructor does) corrupts distances, and
+    keep-first is input-order dependent. Returns (src, dst, wgt) deduped,
+    in key-sorted order (deterministic regardless of input order).
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    wgt = np.asarray(wgt, np.float32)
+    if src.size == 0:
+        return src, dst, wgt
+    key = src * n + dst
+    order = np.lexsort((wgt, key))          # by key, then min weight first
+    key_s = key[order]
+    first = np.r_[True, key_s[1:] != key_s[:-1]]
+    keep = order[first]
+    return src[keep], dst[keep], wgt[keep]
+
+
 def _cumcount(keys: np.ndarray) -> np.ndarray:
     """Position of each element within its key group (keys need not be sorted)."""
     if keys.size == 0:
@@ -55,6 +79,11 @@ class Graph:
     def from_edges(n: int, src: np.ndarray, dst: np.ndarray,
                    weights: Optional[np.ndarray] = None,
                    directed: bool = False) -> "Graph":
+        """Duplicate-edge policy: parallel (src, dst) pairs collapse to one
+        edge with the MIN weight (``dedupe_edges_min``), identically on the
+        directed and undirected paths. The directed path previously let the
+        CSR constructor SUM duplicate weights (corrupting SSSP) while the
+        undirected path kept an arbitrary first occurrence."""
         src = np.asarray(src, np.int64)
         dst = np.asarray(dst, np.int64)
         if weights is None:
@@ -63,11 +92,8 @@ class Graph:
         if not directed:
             src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
             weights = np.concatenate([weights, weights])
-            key = src * n + dst
-            _, uniq = np.unique(key, return_index=True)
-            src, dst, weights = src[uniq], dst[uniq], weights[uniq]
+        src, dst, weights = dedupe_edges_min(n, src, dst, weights)
         adj = sp.csr_matrix((weights, (dst, src)), shape=(n, n))  # row v = in-nbrs of v
-        adj.sum_duplicates()
         out_deg = np.bincount(src, minlength=n).astype(np.int32)
         return Graph(n=n, indptr=adj.indptr.astype(np.int64),
                      indices=adj.indices.astype(np.int32),
@@ -140,6 +166,10 @@ class PartitionedGraph:
     re_slot: np.ndarray            # (P, r_max) int32
     mailbox_cap: int               # max messages any (src,dst) partition pair carries
     attrs: dict = dataclasses.field(default_factory=dict)  # name -> (P, v_max)
+    # temporal lineage: 0 = the base GoFS build; each applied EdgeDelta batch
+    # bumps it (gofs.temporal). Serving caches key results on (graph, version)
+    # so stale answers die with the version they were computed at.
+    version: int = 0
 
     @property
     def d_max(self) -> int:

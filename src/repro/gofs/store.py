@@ -48,7 +48,7 @@ class GoFSStore:
             n_global=pg.n_global, num_parts=pg.num_parts, v_max=pg.v_max,
             d_max=pg.d_max, r_max=pg.r_max, mailbox_cap=pg.mailbox_cap,
             num_subgraphs=pg.num_subgraphs.tolist(),
-            attrs=sorted(pg.attrs.keys()),
+            attrs=sorted(pg.attrs.keys()), version=pg.version,
         )
         with open(os.path.join(gdir, "meta.json"), "w") as f:
             json.dump(meta, f)
@@ -106,4 +106,5 @@ class GoFSStore:
             n_global=m["n_global"], num_parts=P, v_max=m["v_max"],
             part_of=part_of, local_of=local_of,
             num_subgraphs=np.asarray(m["num_subgraphs"], np.int32),
-            mailbox_cap=m["mailbox_cap"], attrs=a, **batch)
+            mailbox_cap=m["mailbox_cap"], attrs=a,
+            version=m.get("version", 0), **batch)

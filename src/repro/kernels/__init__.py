@@ -2,10 +2,16 @@
 fused flash attention (LM-substrate hot-spot), each with jnp oracles."""
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mamba_scan import mamba1_scan_pallas, mamba1_scan_ref
-from repro.kernels.ops import bin_rows_by_degree, multibin_spmv, semiring_spmv
-from repro.kernels.ref import semiring_spmv_ref
-from repro.kernels.semiring_spmv import semiring_spmv_pallas
+from repro.kernels.ops import (bin_rows_by_degree, binned_ell_spmv_multi,
+                               binned_ell_spmv_multi_frontier, multibin_spmv,
+                               semiring_spmv, semiring_spmv_frontier)
+from repro.kernels.ref import semiring_spmv_frontier_ref, semiring_spmv_ref
+from repro.kernels.semiring_spmv import (semiring_spmv_frontier_pallas,
+                                         semiring_spmv_pallas)
 
 __all__ = ["semiring_spmv", "semiring_spmv_ref", "semiring_spmv_pallas",
+           "semiring_spmv_frontier", "semiring_spmv_frontier_ref",
+           "semiring_spmv_frontier_pallas",
+           "binned_ell_spmv_multi", "binned_ell_spmv_multi_frontier",
            "bin_rows_by_degree", "multibin_spmv", "flash_attention_pallas",
            "mamba1_scan_pallas", "mamba1_scan_ref"]

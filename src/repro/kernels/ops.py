@@ -20,8 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.gofs.formats import PAD
-from repro.kernels.ref import SEMIRINGS, semiring_spmv_ref
-from repro.kernels.semiring_spmv import semiring_spmv_pallas
+from repro.kernels.ref import (SEMIRINGS, semiring_spmv_frontier_ref,
+                               semiring_spmv_ref)
+from repro.kernels.semiring_spmv import (semiring_spmv_frontier_pallas,
+                                         semiring_spmv_pallas)
 
 
 def _default_backend() -> str:
@@ -37,6 +39,23 @@ def semiring_spmv(x: jnp.ndarray, nbr: jnp.ndarray, wgt: jnp.ndarray,
     if backend == "pallas":
         return semiring_spmv_pallas(x, nbr, wgt, semiring, block_v=block_v,
                                     interpret=jax.default_backend() != "tpu")
+    raise ValueError(f"unknown backend {backend}")
+
+
+def semiring_spmv_frontier(x: jnp.ndarray, frontier: jnp.ndarray,
+                           nbr: jnp.ndarray, wgt: jnp.ndarray, semiring: str,
+                           backend: Optional[str] = None,
+                           block_v: int = 256):
+    """Frontier-masked ELL sweep (idempotent ⊕ only): rows with no active
+    in-neighbor yield the identity at ~0 cost (the Pallas path predicates the
+    gather+combine per row block on the frontier). Returns (y, row_active)."""
+    backend = backend or _default_backend()
+    if backend == "jnp":
+        return semiring_spmv_frontier_ref(x, frontier, nbr, wgt, semiring)
+    if backend == "pallas":
+        return semiring_spmv_frontier_pallas(
+            x, frontier, nbr, wgt, semiring, block_v=block_v,
+            interpret=jax.default_backend() != "tpu")
     raise ValueError(f"unknown backend {backend}")
 
 
@@ -74,6 +93,42 @@ def binned_ell_spmv_multi(x: jnp.ndarray, nbr_lo: jnp.ndarray,
     if semiring == "max_first":
         return ref.max(yh, mode="drop")
     return ref.add(yh, mode="drop")
+
+
+def binned_ell_spmv_multi_frontier(x: jnp.ndarray, frontier: jnp.ndarray,
+                                   nbr_lo: jnp.ndarray, wgt_lo: jnp.ndarray,
+                                   hub_idx: jnp.ndarray, hub_nbr: jnp.ndarray,
+                                   hub_wgt: jnp.ndarray,
+                                   semiring: str) -> jnp.ndarray:
+    """Frontier-masked two-bin multi-vector sweep: frontier is (V, Q) bool,
+    per query lane. A (row, q) pair with no active in-neighbor in lane q
+    yields the ⊕-identity (the caller's combine keeps its old state), so a
+    query whose region has quiesced stops paying for that region's rows.
+    Idempotent semirings only — see semiring_spmv_frontier_ref."""
+    assert semiring in ("min_plus", "max_first")
+    v_max = x.shape[0]
+    ident = jnp.inf if semiring == "min_plus" else -jnp.inf
+
+    def sweep(nbr, wgt):
+        valid = nbr != PAD
+        safe = jnp.where(valid, nbr, 0)
+        act = jnp.any(valid[..., None] & frontier[safe, :], axis=1)  # (rows, Q)
+        g = x[safe, :]                                   # (rows, D, Q)
+        if semiring == "min_plus":
+            t = jnp.where(valid[..., None], g + wgt[..., None], jnp.inf)
+            y = jnp.min(t, axis=1)
+        else:
+            t = jnp.where(valid[..., None], g, -jnp.inf)
+            y = jnp.max(t, axis=1)
+        return jnp.where(act, y, ident)
+
+    y = sweep(nbr_lo, wgt_lo)                            # (V, Q)
+    yh = sweep(hub_nbr, hub_wgt)                         # (H, Q)
+    idx = jnp.where(hub_idx != PAD, hub_idx, v_max)
+    ref = y.at[idx]
+    if semiring == "min_plus":
+        return ref.min(yh, mode="drop")
+    return ref.max(yh, mode="drop")
 
 
 # ---------------- multi-bin ELL (degree-skew mitigation) ----------------

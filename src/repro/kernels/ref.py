@@ -34,3 +34,32 @@ def semiring_spmv_ref(x: jnp.ndarray, nbr: jnp.ndarray, wgt: jnp.ndarray,
         t = jnp.where(valid, g * wgt, 0.0)
         return jnp.sum(t, axis=1)
     raise ValueError(f"unknown semiring {semiring}")
+
+
+def semiring_spmv_frontier_ref(x: jnp.ndarray, frontier: jnp.ndarray,
+                               nbr: jnp.ndarray, wgt: jnp.ndarray,
+                               semiring: str):
+    """Frontier-masked ELL sweep: rows with NO active in-neighbor yield the
+    ⊕-identity (the caller's element-wise combine keeps their old state);
+    rows WITH one reduce their full neighbor list, exactly like the unmasked
+    sweep. Restricted to the idempotent semirings — for those, combine(x,
+    identity) == x, so masked and unmasked fixpoints are bitwise identical
+    as long as the initial frontier covers every vertex whose value differs
+    from the previous fixpoint.
+
+    frontier: (V,) bool. Returns (y, row_active) — row_active is the next
+    sweep's candidate set before the caller intersects it with "changed".
+    """
+    assert semiring in ("min_plus", "max_first"), \
+        "frontier masking requires an idempotent ⊕ (min/max)"
+    valid = nbr != PAD
+    safe = jnp.where(valid, nbr, 0)
+    row_active = jnp.any(valid & frontier[safe], axis=1)
+    g = x[safe]  # (V, D)
+    if semiring == "min_plus":
+        t = jnp.where(valid, g + wgt, jnp.inf)
+        y = jnp.min(t, axis=1)
+        return jnp.where(row_active, y, jnp.inf), row_active
+    t = jnp.where(valid, g, -jnp.inf)
+    y = jnp.max(t, axis=1)
+    return jnp.where(row_active, y, -jnp.inf), row_active

@@ -63,8 +63,8 @@ class BatchedSemiringProgram:
 
     def init(self, gb) -> dict:
         x0 = gb[self.init_key]                        # (v_max, Q)
-        return {"x": x0,
-                "changed_v": jnp.broadcast_to(gb["vmask"][:, None], x0.shape)}
+        seed = jnp.broadcast_to(gb["vmask"][:, None], x0.shape)
+        return {"x": x0, "changed_v": seed, "frontier": seed}
 
     def _sweep(self, x, gb):
         # two-bin multi-vector sweep: Q queries per contiguous gather; ⊕ is
@@ -75,35 +75,48 @@ class BatchedSemiringProgram:
                                       gb["adj_hub_wgt"], self.semiring)
         return _ew_combine(self.combine, x, y)
 
-    def superstep(self, state, inbox, gb, step):
+    def _masked_sweep(self, x, f, gb):
+        # frontier-masked variant: a (row, q) lane with no active in-neighbor
+        # yields the identity, so quiesced queries/regions cost ~0 while the
+        # rest of the batch keeps moving. Bitwise identical for idempotent ⊕.
+        y = ops.binned_ell_spmv_multi_frontier(
+            x, f, gb["nbr_lo"], gb["wgt_lo"], gb["adj_hub_idx"],
+            gb["adj_hub_nbr"], gb["adj_hub_wgt"], self.semiring)
+        x2 = _ew_combine(self.combine, x, y)
+        return x2, (x2 != x) & gb["vmask"][:, None]
+
+    def superstep(self, state, inbox, gb, step, axes=()):
         x0 = state["x"]                               # (v_max, Q)
         vmask = gb["vmask"]
         x = _ew_combine(self.combine, x0, inbox)
+        improved = (x != x0) & vmask[:, None]
+        f0 = state["frontier"] | improved
         max_it = self.max_local_iters
         if max_it == 1:
             x2 = self._sweep(x, gb)
             iters = jnp.int32(1)
+            f_left = jnp.zeros_like(f0)
         else:
             cap = jnp.int32(max_it if max_it is not None else 2**30)
 
             def cond(c):
-                _, ch, it = c
-                return ch & (it < cap)
+                _, f, it = c
+                return jnp.any(f) & (it < cap)
 
             def body(c):
-                xc, _, it = c
-                y = xc
+                xc, f, it = c
                 for _ in range(self.fixpoint_unroll):
-                    y = self._sweep(y, gb)
-                ch = jnp.any((y != xc) & vmask[:, None])
-                return y, ch, it + self.fixpoint_unroll
+                    xc, f = self._masked_sweep(xc, f, gb)
+                return xc, f, it + self.fixpoint_unroll
 
-            x2, _, iters = jax.lax.while_loop(
-                cond, body, (x, jnp.bool_(True), jnp.int32(0)))
+            x2, f_left, iters = jax.lax.while_loop(
+                cond, body, (x, f0, jnp.int32(0)))
+        # no step-0 seed override: the engine primes the first inbox from the
+        # init state's messages, so seed values were already delivered
         changed_v = (x2 != x0) & vmask[:, None]
-        changed_v = jnp.where(step == 0, vmask[:, None], changed_v)
         changed_q = jnp.any(changed_v, axis=0)        # (Q,)
-        return {"x": x2, "changed_v": changed_v}, changed_q, iters
+        return {"x": x2, "changed_v": changed_v, "frontier": f_left}, \
+            changed_q, iters
 
     def messages(self, state, gb):
         src = gb["re_src"]
@@ -138,7 +151,7 @@ class BatchedPersonalizedPageRank:
         deg = gb["out_degree"].astype(jnp.float32)[:, None]
         return jnp.where(deg > 0, r / jnp.maximum(deg, 1.0), 0.0)
 
-    def superstep(self, state, inbox, gb, step):
+    def superstep(self, state, inbox, gb, step, axes=()):
         vmask = gb["vmask"]
         r = state["r"]                                # (v_max, Q)
         # binned multi-vector sweep over UNIT weights (PR pulls rank shares,
@@ -148,10 +161,19 @@ class BatchedPersonalizedPageRank:
             self._contrib(r, gb), gb["nbr_lo"], jnp.ones_like(gb["wgt_lo"]),
             gb["adj_hub_idx"], gb["adj_hub_nbr"],
             jnp.ones_like(gb["adj_hub_wgt"]), "plus_times")
+        # per-query GLOBAL dangling mass, redistributed by each query's
+        # teleport distribution (same math as PageRankProgram — parity with
+        # the scalar program is load-bearing for the serving tests)
+        dangling = jnp.sum(
+            jnp.where((vmask & (gb["out_degree"] == 0))[:, None], r, 0.0),
+            axis=0)                                   # (Q,)
+        if axes:
+            dangling = jax.lax.psum(dangling, axes)
         r_new = jnp.where(
             vmask[:, None],
             (1.0 - self.damping) * gb[self.seed_key]
-            + self.damping * (pull + inbox), 0.0)
+            + self.damping * (pull + inbox
+                              + dangling[None, :] * gb[self.seed_key]), 0.0)
         active = step + 1 < self.num_iters
         changed_q = jnp.broadcast_to(active, (self.num_queries,))
         return {"r": r_new}, changed_q, jnp.int32(1)

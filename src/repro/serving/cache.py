@@ -35,6 +35,7 @@ class ResultCache:
         self._d: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.invalidations = 0
 
     def get(self, key) -> Optional[np.ndarray]:
         if key in self._d:
@@ -52,11 +53,23 @@ class ResultCache:
         while len(self._d) > self.capacity:
             self._d.popitem(last=False)
 
+    def invalidate(self, pred) -> int:
+        """Drop every entry whose key satisfies ``pred``; returns the count.
+        The service calls this on graph updates — version-tagged keys make
+        stale hits impossible anyway, but eagerly dropping them returns the
+        capacity to live entries instead of waiting for LRU churn."""
+        dead = [k for k in self._d if pred(k)]
+        for k in dead:
+            del self._d[k]
+        self.invalidations += len(dead)
+        return len(dead)
+
     def __len__(self) -> int:
         return len(self._d)
 
     def stats(self) -> dict:
-        return dict(entries=len(self._d), hits=self.hits, misses=self.misses)
+        return dict(entries=len(self._d), hits=self.hits, misses=self.misses,
+                    invalidations=self.invalidations)
 
 
 def choose_landmarks(pg: PartitionedGraph, num: int,
@@ -78,9 +91,12 @@ def choose_landmarks(pg: PartitionedGraph, num: int,
 @dataclasses.dataclass
 class LandmarkCache:
     """L exact landmark distance vectors for one graph; answers approximate
-    SSSP with O(L·n) numpy and no engine run."""
+    SSSP with O(L·n) numpy and no engine run. ``graph_version`` records the
+    PartitionedGraph version the vectors were computed at — the service
+    drops (and optionally rebuilds) the cache when a delta bumps it."""
     landmarks: np.ndarray          # (L,) global vertex ids
     dist: np.ndarray               # (L, n) exact distances from each landmark
+    graph_version: int = 0
     queries_answered: int = 0
 
     @property
@@ -103,7 +119,8 @@ class LandmarkCache:
         eng = GopherEngine(pg, prog, backend=backend, mesh=mesh)
         state, _ = eng.run_queries(extra={"qinit": sssp_query_init(pg, lm)})
         return LandmarkCache(landmarks=lm,
-                             dist=gather_query_results(pg, state["x"]))
+                             dist=gather_query_results(pg, state["x"]),
+                             graph_version=pg.version)
 
     def approx_sssp(self, source: int) -> np.ndarray:
         """(n,) UPPER bounds on d(source, ·): min over landmarks of the

@@ -106,6 +106,42 @@ class GraphQueryService:
         self._pending: List[Request] = []
         self._next_ticket = 0
 
+    # ---------------- graph lifecycle (temporal serving) ----------------
+    def _cache_key(self, q: pl.Query) -> tuple:
+        """Exact-cache key = query key + the target graph's VERSION, so a
+        result computed at version k can never answer a query at k+1 (an
+        unknown graph keys at version -1 and flows to admission rejection)."""
+        pg = self.graphs.get(q.graph)
+        return (q.cache_key(), pg.version if pg is not None else -1)
+
+    def update_graph(self, name: str, pg: PartitionedGraph) -> None:
+        """Swap in a new version of a registered graph and invalidate every
+        per-graph derived artifact: cached results, pooled engines + their
+        shared device block (shapes may have changed), and the landmark
+        cache. Invalidation is UNCONDITIONAL for the graph name — the new
+        graph may carry the same version number as the old one (e.g. two
+        independent version-0 builds), so version equality proves nothing."""
+        self.graphs[name] = pg
+        self.cache.invalidate(lambda k: k[0][0] == name)
+        self._gb.pop(name, None)
+        self._engines = {k: e for k, e in self._engines.items()
+                         if k[0] != name}
+        self.landmark_caches.pop(name, None)
+
+    def apply_delta(self, name: str, delta, directed: bool = False,
+                    rebuild_landmarks: bool = False):
+        """Ingest an edge-delta batch for a registered graph (gofs.temporal):
+        bumps the graph version, invalidates caches/engines, optionally
+        rebuilds the landmark tier. Returns the DeltaResult so callers can
+        chain incremental analytics off the dirty seeds."""
+        from repro.gofs.temporal import apply_delta as _apply
+        old_lc = self.landmark_caches.get(name)
+        res = _apply(self.graphs[name], delta, directed=directed)
+        self.update_graph(name, res.pg)
+        if rebuild_landmarks and old_lc is not None:
+            self.enable_landmarks(name, num_landmarks=old_lc.num_landmarks)
+        return res
+
     # ---------------- request intake ----------------
     def submit(self, kind: str, graph: str, sources) -> int:
         """Enqueue a query; returns its ticket."""
@@ -131,7 +167,7 @@ class GraphQueryService:
         # 1. exact-cache pass + dedupe of identical in-flight queries
         by_key: Dict[tuple, List[Request]] = {}
         for r in reqs:
-            key = r.query.cache_key()
+            key = self._cache_key(r.query)
             hit = self.cache.get(key)
             if hit is not None:
                 self.stats.cache_hits += 1
@@ -146,8 +182,8 @@ class GraphQueryService:
         unique = [rs[0].query for rs in by_key.values()]
         batches, rejected = pl.plan(unique, sizes, max_batch=self.max_batch)
         for q, reason in rejected:
-            self.stats.rejected += len(by_key[q.cache_key()])
-            for r in by_key[q.cache_key()]:
+            self.stats.rejected += len(by_key[self._cache_key(q)])
+            for r in by_key[self._cache_key(q)]:
                 responses[r.ticket] = Response(
                     ticket=r.ticket, query=r.query, result=None, error=reason,
                     latency_s=time.perf_counter() - r.t_submit)
@@ -159,8 +195,8 @@ class GraphQueryService:
                 # own copy — a row VIEW would pin the whole (Q, n) batch
                 # array in the cache for its lifetime
                 res = np.array(results[i])
-                self.cache.put(q.cache_key(), res)
-                for r in by_key[q.cache_key()]:
+                self.cache.put(self._cache_key(q), res)
+                for r in by_key[self._cache_key(q)]:
                     responses[r.ticket] = Response(
                         ticket=r.ticket, query=r.query, result=res,
                         latency_s=time.perf_counter() - r.t_submit,

@@ -24,6 +24,33 @@ def test_ell_pack_roundtrip():
     np.testing.assert_allclose(wgt[2, :3], [2, 3, 4])
 
 
+def test_from_edges_duplicate_min_policy():
+    """Regression: duplicate (src, dst) pairs must collapse to the MIN
+    weight on BOTH build paths. The directed path used to silently SUM
+    duplicates through the CSR constructor (corrupting SSSP distances); the
+    undirected path kept an arbitrary first occurrence."""
+    g = Graph.from_edges(4, [0, 0, 0], [1, 1, 1], [3.0, 1.0, 2.0],
+                         directed=True)
+    assert g.nnz == 1
+    assert g.csr()[1, 0] == 1.0          # min, not 6.0 (sum) or 3.0 (first)
+    assert g.out_degree[0] == 1          # dedup counted once, not thrice
+
+    gu = Graph.from_edges(4, [0, 2, 0], [2, 0, 2], [5.0, 1.5, 3.0],
+                          directed=False)
+    au = gu.csr()
+    assert au[2, 0] == 1.5 and au[0, 2] == 1.5
+    assert gu.out_degree[0] == 1 and gu.out_degree[2] == 1
+
+    # end-to-end: the duplicate must not corrupt shortest paths
+    from repro.algorithms import sssp
+    g2 = Graph.from_edges(3, [0, 0, 1], [1, 1, 2], [2.0, 5.0, 1.0],
+                          directed=True)
+    pg = partition_graph(g2, np.zeros(3, np.int32), 1)
+    dist, _ = sssp(pg, 0)
+    assert dist[0, int(pg.local_of[1])] == 2.0
+    assert dist[0, int(pg.local_of[2])] == 3.0
+
+
 def test_partition_graph_edge_conservation():
     g = road_grid(12, 12, drop_frac=0.1, seed=0)
     pg = partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)

@@ -5,6 +5,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+# LM-substrate end-to-end sweeps dominate suite wall time (~6 of 7 minutes);
+# the fast CI lane deselects them, the tier-1 gate still runs everything
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, get_config
 from repro.models import (decode_step, forward, init_cache, init_params,
                           param_count, prefill)

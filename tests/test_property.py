@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.algorithms import connected_components, max_vertex, sssp
 from repro.core import meta_diameter
-from repro.gofs.formats import PAD, partition_graph
+from repro.gofs.formats import PAD, Graph, partition_graph
 from repro.gofs.generators import random_graph
 from repro.gofs.partition import bfs_grow_partition, hash_partition
 
@@ -90,6 +90,66 @@ def test_partitioners_cover_all_vertices(n, parts, seed):
         a = fn(g, parts, seed=seed)
         assert a.shape == (n,)
         assert a.min() >= 0 and a.max() < parts
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(150, 500), st.integers(2, 5), st.integers(0, 10_000),
+       st.integers(1, 5),
+       st.sampled_from(["min_plus", "max_first", "plus_times"]))
+def test_binned_multi_sweep_matches_ref_on_powerlaw(n, parts, seed, Q,
+                                                    semiring):
+    """The serving hot path (two-bin multi-vector ELL sweep) against the
+    scalar oracle, on graphs with guaranteed mega-hub rows (star + ring,
+    powerlaw-extreme) so the hub bin is actually exercised."""
+    import jax.numpy as jnp
+    from repro.core import graph_block
+    from repro.kernels import ops
+    star_dst = np.arange(1, 1 + n // 2)
+    src = np.concatenate([np.zeros(star_dst.size, np.int64),
+                          np.arange(n - 1)])
+    dst = np.concatenate([star_dst, np.arange(1, n)])
+    g = Graph.from_edges(n, src, dst, directed=False)
+    pg = partition_graph(g, hash_partition(g, parts, seed=seed), parts)
+    gb = graph_block(pg)
+    assert (np.asarray(gb["adj_hub_idx"]) != PAD).any(), \
+        "star fixture must produce hub rows"
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0.0, 5.0, (pg.v_max, Q)).astype(np.float32))
+    from repro.kernels import semiring_spmv_ref
+    for p in range(pg.num_parts):
+        got = ops.binned_ell_spmv_multi(
+            x, gb["nbr_lo"][p], gb["wgt_lo"][p], gb["adj_hub_idx"][p],
+            gb["adj_hub_nbr"][p], gb["adj_hub_wgt"][p], semiring)
+        for q in range(Q):
+            ref = semiring_spmv_ref(x[:, q], gb["nbr"][p], gb["wgt"][p],
+                                    semiring)
+            if semiring == "plus_times":   # ⊕=+ reassociates across bins
+                np.testing.assert_allclose(np.asarray(got[:, q]),
+                                           np.asarray(ref), rtol=1e-5,
+                                           atol=1e-6)
+            else:                          # idempotent ⊕: exact
+                assert np.array_equal(np.asarray(got[:, q]), np.asarray(ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(30, 150), st.integers(2, 5), st.integers(0, 10_000))
+def test_pagerank_dangling_mass_sums_to_one(n, parts, seed):
+    """PageRank must conserve rank mass on graphs with sinks: dangling
+    vertices redistribute through the teleport distribution, so ranks sum
+    to 1 (the old code dropped their mass every iteration)."""
+    from repro.algorithms import pagerank
+    rng = np.random.default_rng(seed)
+    ne = max(4, 3 * n)
+    sinks = max(2, n // 8)                 # vertices [0, sinks) never source
+    src = rng.integers(sinks, n, ne)
+    dst = rng.integers(0, n, ne)           # ...but do receive mass
+    keep = src != dst
+    g = Graph.from_edges(n, src[keep], dst[keep], directed=True)
+    assert (g.out_degree == 0).any(), "fixture needs dangling vertices"
+    pg = partition_graph(g, hash_partition(g, parts, seed=seed), parts)
+    r, _ = pagerank(pg, num_iters=40)
+    total = _gather(pg, r).sum()
+    np.testing.assert_allclose(total, 1.0, rtol=1e-4)
 
 
 @settings(max_examples=8, deadline=None)

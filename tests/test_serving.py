@@ -151,6 +151,49 @@ def test_gather_mailbox_matches_scatter_oracle(social_pg):
 
 
 @pytest.mark.parametrize("semiring", ["min_plus", "max_first", "plus_times"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_binned_sweep_matches_ref_on_hub_rows(semiring, seed):
+    """The serving hot path vs the scalar oracle on graphs with GUARANTEED
+    mega-hub rows (a star wired into a ring, powerlaw-extreme), so the hub
+    bin is actually exercised — exact for idempotent ⊕, allclose for the
+    reassociated sum.
+
+    Deterministic twin of test_property.py::
+    test_binned_multi_sweep_matches_ref_on_powerlaw — that module skips
+    entirely when hypothesis isn't installed, so this copy keeps the hot
+    path under oracle coverage in minimal environments."""
+    from repro.gofs import hash_partition
+    from repro.gofs.formats import Graph
+    from repro.kernels import semiring_spmv_ref
+    n = 400
+    star_dst = np.arange(1, 1 + n // 2)
+    src = np.concatenate([np.zeros(star_dst.size, np.int64),
+                          np.arange(n - 1)])
+    dst = np.concatenate([star_dst, np.arange(1, n)])
+    g = Graph.from_edges(n, src, dst, directed=False)
+    pg = partition_graph(g, hash_partition(g, 4, seed=seed), 4)
+    gb = graph_block(pg)
+    assert (np.asarray(gb["adj_hub_idx"]) != PAD).any(), \
+        "star fixture must produce hub rows"
+    rng = np.random.default_rng(seed)
+    Q = 4
+    x = jnp.asarray(rng.uniform(0.0, 5.0, (pg.v_max, Q)).astype(np.float32))
+    for p in range(pg.num_parts):
+        got = ops.binned_ell_spmv_multi(
+            x, gb["nbr_lo"][p], gb["wgt_lo"][p], gb["adj_hub_idx"][p],
+            gb["adj_hub_nbr"][p], gb["adj_hub_wgt"][p], semiring)
+        for q in range(Q):
+            ref = semiring_spmv_ref(x[:, q], gb["nbr"][p], gb["wgt"][p],
+                                    semiring)
+            if semiring == "plus_times":
+                np.testing.assert_allclose(np.asarray(got[:, q]),
+                                           np.asarray(ref), rtol=1e-5,
+                                           atol=1e-6)
+            else:
+                assert np.array_equal(np.asarray(got[:, q]), np.asarray(ref))
+
+
+@pytest.mark.parametrize("semiring", ["min_plus", "max_first", "plus_times"])
 def test_binned_sweep_matches_ell(social_pg, semiring):
     pg = social_pg
     gb = graph_block(pg)

@@ -76,31 +76,59 @@ def test_weighted_sssp():
     np.testing.assert_allclose(ours[finite], d_true[finite], rtol=1e-5)
 
 
-def test_pagerank_matches_reference():
-    g = powerlaw_social(300, m=4, seed=5)
-    pg = partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
-    r, tele = pagerank(pg, num_iters=30)
+def _pagerank_oracle(g, iters, damping=0.85):
+    """float64 power iteration WITH dangling-mass redistribution (the
+    engine's — correct — formulation: sinks teleport their rank)."""
     A = g.csr()
     outdeg = g.out_degree.astype(np.float64)
     rr = np.full(g.n, 1.0 / g.n)
-    for _ in range(30):
+    for _ in range(iters):
         contrib = np.where(outdeg > 0, rr / np.maximum(outdeg, 1), 0)
-        rr = 0.15 / g.n + 0.85 * (A @ contrib)
+        mass = rr[outdeg == 0].sum()
+        rr = (1 - damping) / g.n + damping * (A @ contrib + mass / g.n)
+    return rr
+
+
+def test_pagerank_matches_reference():
+    g = powerlaw_social(300, m=4, seed=5)   # dust vertices = dangling sinks
+    pg = partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
+    r, tele = pagerank(pg, num_iters=30)
+    rr = _pagerank_oracle(g, 30)
     # fp32 segment-sum at powerlaw hubs vs float64 reference: relative check
     np.testing.assert_allclose(_gather(pg, r), rr, rtol=1e-2, atol=1e-5)
     assert tele.supersteps == 30
+    np.testing.assert_allclose(_gather(pg, r).sum(), 1.0, rtol=1e-4)
+
+
+def test_pagerank_dangling_mass_conserved():
+    """Bugfix regression: directed graph with sinks — ranks must sum to 1
+    (dangling mass redistributes via teleport instead of evaporating), and
+    the early-halt tolerance is a GLOBAL criterion, so every partition halts
+    at the same superstep."""
+    rng = np.random.default_rng(11)
+    n, ne = 120, 400
+    src = rng.integers(15, n, ne)           # vertices [0, 15) are pure sinks
+    dst = rng.integers(0, n, ne)
+    keep = src != dst
+    from repro.gofs.formats import Graph
+    g = Graph.from_edges(n, src[keep], dst[keep], directed=True)
+    assert (g.out_degree == 0).any()
+    pg = partition_graph(g, hash_partition(g, 4, seed=0), 4)
+    r, _ = pagerank(pg, num_iters=50)
+    np.testing.assert_allclose(_gather(pg, r).sum(), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(_gather(pg, r), _pagerank_oracle(g, 50),
+                               rtol=1e-3, atol=1e-7)
+    # global tol: converges and conserves mass with early halt too
+    r2, tele2 = pagerank(pg, num_iters=200, tol=1e-10)
+    assert tele2.supersteps < 200
+    np.testing.assert_allclose(_gather(pg, r2).sum(), 1.0, rtol=1e-4)
 
 
 def test_blockrank_converges_to_pagerank_fixpoint():
     g = road_grid(12, 12, drop_frac=0.05, seed=6)
     pg = partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
     rb, tele, info = blockrank(pg, tol=1e-9, max_iters=100)
-    A = g.csr()
-    outdeg = g.out_degree.astype(np.float64)
-    rr = np.full(g.n, 1.0 / g.n)
-    for _ in range(200):
-        contrib = np.where(outdeg > 0, rr / np.maximum(outdeg, 1), 0)
-        rr = 0.15 / g.n + 0.85 * (A @ contrib)
+    rr = _pagerank_oracle(g, 200)
     np.testing.assert_allclose(_gather(pg, rb), rr, atol=1e-4)
     assert info["num_meta"] >= pg.num_parts  # at least one block per partition
 
@@ -172,3 +200,26 @@ def test_bsp_checkpoint_restart(tmp_path):
     state2, tele2 = eng2.run(checkpointer=ck, checkpoint_every=2, resume=True)
     assert np.array_equal(np.asarray(state2["x"]), np.asarray(ref_state["x"]))
     assert tele2.supersteps == ref_tele.supersteps
+
+
+def test_checkpointed_run_telemetry_and_block_reuse(tmp_path):
+    """Regression: checkpointed runs must reuse the engine's cached device
+    graph block (not rebuild a second copy) and report REAL telemetry —
+    message counts and per-superstep changed history, like normal runs."""
+    from repro.core import GopherEngine, SemiringProgram, init_max_vertex
+    from repro.training.checkpoint import Checkpointer
+    g = road_grid(14, 14, drop_frac=0.05, seed=12)
+    pg = partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
+    prog = SemiringProgram(semiring="max_first", init_fn=init_max_vertex)
+    ref_state, ref_tele = GopherEngine(pg, prog).run()
+
+    eng = GopherEngine(pg, prog)
+    gb_before = eng._graph_block()
+    state, tele = eng.run(checkpointer=Checkpointer(str(tmp_path)),
+                          checkpoint_every=3)
+    assert eng._graph_block() is gb_before        # cached block reused
+    assert np.array_equal(np.asarray(state["x"]), np.asarray(ref_state["x"]))
+    assert tele.supersteps == ref_tele.supersteps
+    assert tele.messages_sent == ref_tele.messages_sent >= 0
+    assert np.array_equal(tele.changed_hist, ref_tele.changed_hist)
+    assert np.array_equal(tele.local_iters, ref_tele.local_iters)
