@@ -8,11 +8,16 @@ RN dataset. Compare
     full        steady-state cold engine run on the already-built version-
                 k+1 graph (engine + compiled loop REUSED across calls, graph
                 build and compile excluded — conservative in full's favor)
-    incremental apply_delta (INCLUDED — it's part of the ingest path) +
-                graph-block rebuild + frontier-seeded resume from the
-                version-k fixpoint
+    incremental apply_delta (INCLUDED — it's part of the ingest path) with
+                ZERO-REPACK block patching (the version-k host block is
+                patched in O(|delta|) instead of re-packed) + frontier-
+                seeded resume from the version-k fixpoint over the
+                frontier-compacted sparse exchange
 
-and assert the answers are bit-identical. Writes BENCH_incremental.json.
+and assert the answers are bit-identical. Also times the per-version fixed
+cost both ways — old ingest (apply_delta + cold host_graph_block re-pack)
+vs zero-repack ingest (apply_delta(block=...)) — the Gopher Wire block
+criterion. Writes BENCH_incremental.json.
 """
 from __future__ import annotations
 
@@ -61,6 +66,7 @@ def run(write_json: bool = True):
     records = {"dataset": "RN", "n": g_u.n}
 
     def bench(algo, g, pg0, semiring, init_fn, post, inc_fn, weighted):
+        from repro.core import device_block, host_graph_block
         num_ins = max(1, (g.nnz // 2) // 100)      # 1% insert batch
         iu, iv = _reopened_edges(g, 100, 100, num_ins, seed=7)
         # reopened segments carry typical-to-slow travel times (upper half of
@@ -69,8 +75,22 @@ def run(write_json: bool = True):
         iw = (np.random.default_rng(8).uniform(5.0, 10.0, iu.size)
               .astype(np.float32) if weighted else None)
         delta = EdgeDelta.inserts(iu, iv, iw)
-        res = apply_delta(pg0, delta, directed=False)
+        hb0 = host_graph_block(pg0)                # version-k block (held by
+                                                   # the serving fleet)
+        res = apply_delta(pg0, delta, directed=False, block=hb0)
         pg1 = res.pg
+
+        # per-version fixed cost of the GRAPH-BLOCK BUILD (timed first, at
+        # ingest position in the pipeline): cold re-pack of the derived
+        # arrays vs replaying the delta's patch-event log over the
+        # version-k block (what apply_delta(block=...) does inline)
+        from repro.core import patch_host_block
+        _, dt_block_cold = timed(lambda: host_graph_block(pg1),
+                                 warmup=True, repeats=20)
+        _, dt_block_patch = timed(
+            lambda: patch_host_block(hb0, pg1, *res.events),
+            warmup=True, repeats=20)
+        block_speedup = dt_block_cold / dt_block_patch
 
         prog = SemiringProgram(semiring=semiring, init_fn=init_fn)
         eng = GopherEngine(pg1, prog)              # steady-state engine
@@ -78,17 +98,20 @@ def run(write_json: bool = True):
         full = post(pg1, np.asarray(st_full["x"]))
 
         def inc():
-            r = apply_delta(pg0, delta, directed=False)
-            return inc_fn(r)
+            r = apply_delta(pg0, delta, directed=False, block=hb0)
+            return inc_fn(r, device_block(r.block))
 
         (inc_out, t_inc), dt_inc = timed(inc, warmup=True, repeats=3)
         assert np.array_equal(full, inc_out), \
             f"{algo}: incremental != full recompute"
         speedup = dt_full / dt_inc
+
         emit(f"incremental_{algo}_full_RN", dt_full,
              f"supersteps={t_full.supersteps}")
         emit(f"incremental_{algo}_inc_RN", dt_inc,
              f"supersteps={t_inc.supersteps};speedup={speedup:.1f}x")
+        emit(f"incremental_{algo}_block_RN", dt_block_patch,
+             f"cold={dt_block_cold * 1e6:.0f}us;speedup={block_speedup:.1f}x")
         records[algo] = dict(
             full_us=round(dt_full * 1e6), inc_us=round(dt_inc * 1e6),
             speedup=round(speedup, 2), bit_identical=True,
@@ -96,22 +119,30 @@ def run(write_json: bool = True):
             full_supersteps=int(t_full.supersteps),
             inc_supersteps=int(t_inc.supersteps),
             full_local_iters=int(t_full.local_iters.sum()),
-            inc_local_iters=int(t_inc.local_iters.sum()))
+            inc_local_iters=int(t_inc.local_iters.sum()),
+            inc_wire_slots=int(t_inc.wire_slots),
+            full_wire_slots=int(t_full.wire_slots),
+            block_cold_us=round(dt_block_cold * 1e6),
+            block_patch_us=round(dt_block_patch * 1e6),
+            block_fixed_speedup=round(block_speedup, 2))
 
     prev_cc = connected_components(pg_u)[0]
     prev_bfs = bfs(pg_u, 0)[0]
     prev_sssp = sssp(pg_w, 0)[0]
 
     bench("cc", g_u, pg_u, "max_first", init_max_vertex, post_cc,
-          lambda r: incremental_connected_components(r.pg, prev_cc, r)[::2],
+          lambda r, gb: incremental_connected_components(
+              r.pg, prev_cc, r, gb=gb)[::2],
           weighted=False)
     bench("bfs", g_u, pg_u, "min_plus",
           make_sssp_init(int(pg_u.part_of[0]), int(pg_u.local_of[0])),
-          post_dist, lambda r: incremental_bfs(r.pg, 0, prev_bfs, r),
+          post_dist,
+          lambda r, gb: incremental_bfs(r.pg, 0, prev_bfs, r, gb=gb),
           weighted=False)
     bench("sssp", g_w, pg_w, "min_plus",
           make_sssp_init(int(pg_w.part_of[0]), int(pg_w.local_of[0])),
-          post_dist, lambda r: incremental_sssp(r.pg, 0, prev_sssp, r),
+          post_dist,
+          lambda r, gb: incremental_sssp(r.pg, 0, prev_sssp, r, gb=gb),
           weighted=True)
 
     if write_json:

@@ -8,10 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
     blockrank_* BlockRank vs classic PageRank supersteps (paper §5.3)
     serving_* batched multi-query serving QPS vs sequential (Gopher Serve)
     incremental_* delta restart vs full recompute (Gopher Delta)
+    comm_*    exchange volume, compact vs dense mailbox (Gopher Wire)
 
 Every emitted row is also recorded to BENCH_paper_suite.json at the repo
-root (plus BENCH_incremental.json from the incremental bench) so the perf
-trajectory is machine-readable across PRs.
+root (plus BENCH_incremental.json / BENCH_comm.json from the incremental
+and comm benches) so the perf trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
@@ -30,9 +31,9 @@ def _blockrank():
 
 
 def main() -> None:
-    from benchmarks import (bench_goffish_vs_vertex, bench_incremental,
-                            bench_loading, bench_serving, bench_straggler,
-                            bench_supersteps)
+    from benchmarks import (bench_comm, bench_goffish_vs_vertex,
+                            bench_incremental, bench_loading, bench_serving,
+                            bench_straggler, bench_supersteps)
     from benchmarks.common import write_bench_json
     print("name,us_per_call,derived")
     bench_goffish_vs_vertex.run()
@@ -42,6 +43,7 @@ def main() -> None:
     _blockrank()
     bench_serving.run()
     bench_incremental.run()
+    bench_comm.run()
     print(f"# wrote {write_bench_json('paper_suite')}", file=sys.stderr)
 
 

@@ -7,8 +7,9 @@ from repro.algorithms.bfs import bfs
 from repro.algorithms.max_vertex import max_vertex
 from repro.algorithms.incremental import (incremental_bfs,
                                           incremental_connected_components,
-                                          incremental_sssp)
+                                          incremental_sssp,
+                                          incremental_sssp_batched)
 
 __all__ = ["connected_components", "sssp", "pagerank", "blockrank", "bfs",
            "max_vertex", "incremental_sssp", "incremental_bfs",
-           "incremental_connected_components"]
+           "incremental_connected_components", "incremental_sssp_batched"]

@@ -93,7 +93,8 @@ def _incremental_run(pg: PartitionedGraph, semiring: str, prev_x: np.ndarray,
                      delta: DeltaResult, init_values: np.ndarray,
                      backend: str = "local", mesh=None,
                      spmv_backend: Optional[str] = None,
-                     max_local_iters: Optional[int] = None):
+                     max_local_iters: Optional[int] = None,
+                     gb: Optional[dict] = None):
     x0 = np.array(prev_x, np.float32, copy=True)
     frontier = np.asarray(delta.dirty_insert, bool).copy()
     if delta.dirty_remove.any():
@@ -104,14 +105,17 @@ def _incremental_run(pg: PartitionedGraph, semiring: str, prev_x: np.ndarray,
     prog = SemiringProgram(semiring=semiring, resume=True,
                            spmv_backend=spmv_backend,
                            max_local_iters=max_local_iters)
-    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh)
+    # gb: pass the zero-repack-patched device block (DeltaResult.block via
+    # core.blocks.device_block) so the restart skips the per-version re-pack
+    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh, gb=gb)
     return eng.run(extra={"x0": x0, "frontier0": frontier})
 
 
 def incremental_sssp(pg: PartitionedGraph, source_global: int,
                      prev_dist: np.ndarray, delta: DeltaResult,
                      backend: str = "local", mesh=None,
-                     spmv_backend: Optional[str] = None):
+                     spmv_backend: Optional[str] = None,
+                     gb: Optional[dict] = None):
     """SSSP on graph version k+1 from version k's distances. Returns
     (distances (P, v_max), Telemetry) — bit-identical to a cold sssp()."""
     init = np.full((pg.num_parts, pg.v_max), np.inf, np.float32)
@@ -120,7 +124,7 @@ def incremental_sssp(pg: PartitionedGraph, source_global: int,
     prev_x = np.where(pg.vmask, np.asarray(prev_dist, np.float32), np.inf)
     state, tele = _incremental_run(pg, "min_plus", prev_x, delta, init,
                                    backend=backend, mesh=mesh,
-                                   spmv_backend=spmv_backend)
+                                   spmv_backend=spmv_backend, gb=gb)
     dist = np.array(state["x"])
     dist[~pg.vmask] = np.inf
     return dist, tele
@@ -129,17 +133,61 @@ def incremental_sssp(pg: PartitionedGraph, source_global: int,
 def incremental_bfs(pg: PartitionedGraph, source_global: int,
                     prev_levels: np.ndarray, delta: DeltaResult,
                     backend: str = "local", mesh=None,
-                    spmv_backend: Optional[str] = None):
+                    spmv_backend: Optional[str] = None,
+                    gb: Optional[dict] = None):
     """BFS = SSSP over unit weights (graph must carry unit weights)."""
     return incremental_sssp(pg, source_global, prev_levels, delta,
                             backend=backend, mesh=mesh,
-                            spmv_backend=spmv_backend)
+                            spmv_backend=spmv_backend, gb=gb)
+
+
+def incremental_sssp_batched(pg: PartitionedGraph, sources_global,
+                             prev_dist: np.ndarray, delta: DeltaResult,
+                             backend: str = "local", mesh=None,
+                             gb: Optional[dict] = None):
+    """Q-source incremental SSSP: resume ALL query lanes from their previous
+    fixpoints in ONE batched BSP run (the landmark-maintenance path —
+    ROADMAP item 4). ``prev_dist`` is (Q, n_global) in global vertex order
+    (LandmarkCache.dist layout); returns (dist (Q, n_global), Telemetry),
+    bit-identical to a cold batched run on the new graph.
+
+    The dirty seed is shared across lanes (an inserted edge can improve any
+    lane; extra frontier on a converged lane just re-relaxes to the same
+    values — idempotent ⊕ makes the overshoot a no-op), while removals
+    reset each lane's meta-reachable region to its OWN cold init before the
+    restart. ``gb`` lets the caller pass the (possibly zero-repack-patched)
+    device graph block so the maintenance run shares the serving fleet's
+    device copy."""
+    from repro.serving.batched import (BatchedSemiringProgram,
+                                       gather_query_results, sssp_query_init)
+    sources_global = np.asarray(sources_global, np.int64).reshape(-1)
+    L = int(sources_global.shape[0])
+    P, v_max = pg.num_parts, pg.v_max
+    prev = np.asarray(prev_dist, np.float32)
+    x0 = np.full((P, v_max, L), np.inf, np.float32)
+    for p in range(P):
+        m = pg.vmask[p]
+        x0[p][m] = prev[:, pg.global_id[p][m]].T
+    frontier = np.asarray(delta.dirty_insert, bool).copy()
+    if delta.dirty_remove.any():
+        reset = _meta_reachable(pg, np.asarray(delta.dirty_remove, bool))
+        init = sssp_query_init(pg, sources_global)      # (P, v_max, L)
+        x0[reset] = init[reset]
+        frontier |= reset | _boundary_sources(pg, reset)
+    frontier &= pg.vmask
+    qf = np.broadcast_to(frontier[..., None], x0.shape)
+    prog = BatchedSemiringProgram(semiring="min_plus", num_queries=L,
+                                  resume=True)
+    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh, gb=gb)
+    state, tele = eng.run_queries(extra={"qx0": x0, "qfrontier0": qf})
+    return gather_query_results(pg, state["x"]), tele
 
 
 def incremental_connected_components(
         pg: PartitionedGraph, prev_labels: np.ndarray, delta: DeltaResult,
         backend: str = "local", mesh=None,
-        spmv_backend: Optional[str] = None) -> Tuple[np.ndarray, int, object]:
+        spmv_backend: Optional[str] = None,
+        gb: Optional[dict] = None) -> Tuple[np.ndarray, int, object]:
     """HCC labels on graph version k+1 from version k's labels. Returns
     (labels, num_components, Telemetry) — bit-identical to a cold run."""
     gid = pg.global_id.astype(np.float32)
@@ -147,7 +195,7 @@ def incremental_connected_components(
     prev_x = np.where(pg.vmask, np.asarray(prev_labels, np.float32), -np.inf)
     state, tele = _incremental_run(pg, "max_first", prev_x, delta, init,
                                    backend=backend, mesh=mesh,
-                                   spmv_backend=spmv_backend)
+                                   spmv_backend=spmv_backend, gb=gb)
     x = np.asarray(state["x"])
     labels = np.where(pg.vmask, x, -1).astype(np.int64)
     ncc = len(np.unique(labels[pg.vmask]))

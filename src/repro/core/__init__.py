@@ -1,5 +1,7 @@
 """Gopher: sub-graph centric BSP engine (the paper's core contribution)."""
-from repro.core.engine import GopherEngine, Telemetry, graph_block
+from repro.core.blocks import (device_block, graph_block, host_graph_block,
+                               patch_host_block)
+from repro.core.engine import GopherEngine, Telemetry
 from repro.core.programs import (PageRankProgram, SemiringProgram,
                                  init_max_vertex, make_bfs_init, make_sssp_init)
 from repro.core.subgraph import (meta_diameter, meta_graph, subgraph_sizes,
@@ -7,6 +9,7 @@ from repro.core.subgraph import (meta_diameter, meta_graph, subgraph_sizes,
 
 __all__ = [
     "GopherEngine", "Telemetry", "graph_block",
+    "host_graph_block", "device_block", "patch_host_block",
     "SemiringProgram", "PageRankProgram",
     "init_max_vertex", "make_sssp_init", "make_bfs_init",
     "meta_graph", "meta_diameter", "vertex_diameter", "subgraph_sizes",

@@ -34,10 +34,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core import messages as msg
-from repro.gofs.formats import PAD, PartitionedGraph
-
-_GB_FIELDS = ["nbr", "wgt", "vmask", "out_degree", "global_id", "sg_id",
-              "re_src", "re_wgt", "re_dst_part", "re_dst_local", "re_slot"]
+from repro.core.blocks import graph_block  # noqa: F401 (re-exported API)
+from repro.gofs.formats import PartitionedGraph
 
 # the vmapped partition axis gets a collective name so programs can take
 # GLOBAL reductions (PageRank dangling mass / L1 halt) with a plain psum —
@@ -69,105 +67,26 @@ class Telemetry:
     # query-batched runs only: per-query superstep at which the query last
     # changed (its individual convergence point — it stops sending after this)
     query_supersteps: Optional[np.ndarray] = None
+    # wire model (Gopher Wire): mailbox slots actually shipped per superstep
+    # — under the compact exchange this is the frontier's slot count; under
+    # the dense exchange it is the constant P²·cap. wire_hist[s] covers the
+    # exchange that ran at the END of superstep s; the pre-loop inbox prime
+    # is accounted in wire_slots but has no superstep to land in.
+    wire_hist: Optional[np.ndarray] = None     # (supersteps,) int
+    wire_slots: int = 0                        # total slots shipped (incl. prime)
+    bytes_on_wire: int = 0                     # modeled payload bytes (see below)
 
-
-def _binned_adjacency(pg: PartitionedGraph, lane_pad: int = 8):
-    """Two-bin the local ELL by degree (kernels.ops.binned_ell_spmv_multi
-    layout):
-    a narrow (P, v_max, w_lo) block for the bulk plus a full-width
-    (P, ah_max, d_max) block for the few hub rows. One mega-hub otherwise
-    forces every row's sweep lane to its width."""
-    P, v_max, d_pad = pg.nbr.shape
-    deg = (pg.nbr != PAD).sum(2)
-    bulk = deg[deg > 0]
-    p95 = int(np.percentile(bulk, 95)) if bulk.size else 1
-    w_lo = min(((max(p95, 1) + lane_pad - 1) // lane_pad) * lane_pad, d_pad)
-    is_hub = deg > w_lo
-    ah_max = max(int(is_hub.sum(1).max()) if is_hub.size else 0, 1)
-    nbr_lo = pg.nbr[:, :, :w_lo].copy()
-    wgt_lo = pg.wgt[:, :, :w_lo].copy()
-    nbr_lo[is_hub] = PAD
-    wgt_lo[is_hub] = 0.0
-    hub_idx = np.full((P, ah_max), PAD, np.int32)
-    hub_nbr = np.full((P, ah_max, d_pad), PAD, np.int32)
-    hub_wgt = np.zeros((P, ah_max, d_pad), np.float32)
-    for p in range(P):
-        hv = np.flatnonzero(is_hub[p])
-        hub_idx[p, :hv.size] = hv
-        hub_nbr[p, :hv.size] = pg.nbr[p, hv]
-        hub_wgt[p, :hv.size] = pg.wgt[p, hv]
-    return nbr_lo, wgt_lo, hub_idx, hub_nbr, hub_wgt
-
-
-def _mailbox_inverse(pg: PartitionedGraph, lane_pad: int = 8):
-    """Precompute the mailbox routing plan's INVERSE maps so both sides of
-    the superstep exchange are pure gathers (XLA:CPU/TPU scatter is the
-    dominant superstep cost otherwise; the plan is static, so nothing needs
-    to be scattered at runtime — GoFS already fixed every slot at build).
-
-      ob_inv   (P, P*cap)        outbox slot -> remote-edge index (PAD empty)
-      ib_lo    (P, v_max, m_lo)  vertex -> flat received positions
-                                 (src_part*cap + slot), PAD fill
-      ib_hub_idx (P, hr_max)     vertices receiving > m_lo messages
-      ib_hub   (P, hr_max, m_hi) their (wider) feed lists
-
-    The inbox side is two-binned by in-message count for the same reason the
-    ELL sweep degree-bins: one hub receiver would otherwise pad every
-    vertex's feed list to the hub's width.
-    """
-    from repro.gofs.formats import _cumcount
-    P, _ = pg.re_src.shape
-    cap = pg.mailbox_cap
-    v_max = pg.v_max
-    sp_all, e_all = np.nonzero(pg.re_src != PAD)
-    d_all = pg.re_dst_part[sp_all, e_all].astype(np.int64)
-    v_all = pg.re_dst_local[sp_all, e_all].astype(np.int64)
-    c_all = pg.re_slot[sp_all, e_all].astype(np.int64)
-
-    ob_inv = np.full((P, P * cap), PAD, np.int32)
-    ob_inv[sp_all, d_all * cap + c_all] = e_all
-
-    counts = np.zeros((P, v_max), np.int64)
-    np.add.at(counts, (d_all, v_all), 1)
-    m_hi = max(int(counts.max()) if counts.size else 1, 1)
-    bulk = counts[counts > 0]
-    p95 = int(np.percentile(bulk, 95)) if bulk.size else 1
-    m_lo = min(((max(p95, 1) + lane_pad - 1) // lane_pad) * lane_pad, m_hi)
-    m_hi = ((m_hi + lane_pad - 1) // lane_pad) * lane_pad
-    is_hub = counts > m_lo
-    hr_max = max(int(is_hub.sum(1).max()) if is_hub.size else 0, 1)
-
-    ib_lo = np.full((P, v_max, m_lo), PAD, np.int32)
-    ib_hub_idx = np.full((P, hr_max), PAD, np.int32)
-    ib_hub = np.full((P, hr_max, m_hi), PAD, np.int32)
-    hub_row = np.full((P, v_max), -1, np.int64)
-    for d in range(P):
-        hv = np.flatnonzero(is_hub[d])
-        hub_row[d, hv] = np.arange(hv.size)
-        ib_hub_idx[d, :hv.size] = hv
-    k_all = _cumcount(d_all * v_max + v_all)
-    f_all = (sp_all * cap + c_all).astype(np.int32)
-    hub_msg = is_hub[d_all, v_all]
-    ib_lo[d_all[~hub_msg], v_all[~hub_msg], k_all[~hub_msg]] = f_all[~hub_msg]
-    ib_hub[d_all[hub_msg], hub_row[d_all[hub_msg], v_all[hub_msg]],
-           k_all[hub_msg]] = f_all[hub_msg]
-    return ob_inv, ib_lo, ib_hub_idx, ib_hub
-
-
-def graph_block(pg: PartitionedGraph, as_spec: bool = False) -> dict:
-    """The device-side pytree of per-partition arrays (leading axis P).
-    ``as_spec=True`` returns ShapeDtypeStructs (dry-run lowering)."""
-    gb = {k: np.asarray(getattr(pg, k)) for k in _GB_FIELDS}
-    gb["part_index"] = np.arange(pg.num_parts, dtype=np.int32)
-    (gb["nbr_lo"], gb["wgt_lo"], gb["adj_hub_idx"],
-     gb["adj_hub_nbr"], gb["adj_hub_wgt"]) = _binned_adjacency(pg)
-    (gb["ob_inv"], gb["ib_lo"],
-     gb["ib_hub_idx"], gb["ib_hub"]) = _mailbox_inverse(pg)
-    for name, arr in pg.attrs.items():
-        gb[f"attr_{name}"] = np.asarray(arr)
-    if as_spec:
-        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in gb.items()}
-    return {k: jnp.asarray(v) for k, v in gb.items()}
+    @staticmethod
+    def model_bytes(slots: int, num_parts: int, rounds: int, cap: int,
+                    num_queries: Optional[int], compact: bool) -> int:
+        """The comm-volume model: per round the dense exchange ships every
+        pair row — P² · cap · Q values at 4 B — while the compact exchange
+        ships, per pair, a count header (4 B) plus count packed slots at
+        (4·Q value bytes + 4 slot-id bytes) each; payload ∝ |frontier|."""
+        q = num_queries or 1
+        if not compact:
+            return rounds * num_parts * num_parts * cap * q * 4
+        return slots * (4 * q + 4) + rounds * num_parts * num_parts * 4
 
 
 class GopherEngine:
@@ -175,8 +94,10 @@ class GopherEngine:
 
     def __init__(self, pg: PartitionedGraph, program, backend: str = "local",
                  mesh=None, axis_name: str = "parts",
-                 max_supersteps: int = 4096, gb: Optional[dict] = None):
+                 max_supersteps: int = 4096, gb: Optional[dict] = None,
+                 exchange: str = "compact"):
         assert backend in ("local", "shard_map")
+        assert exchange in ("compact", "dense")
         if backend == "shard_map":
             assert mesh is not None
             d = mesh.shape[axis_name]
@@ -187,6 +108,10 @@ class GopherEngine:
         self.mesh = mesh
         self.axis_name = axis_name
         self.max_supersteps = max_supersteps
+        self.exchange = exchange     # 'compact' = frontier-compacted sparse
+                                     # exchange (Gopher Wire, the default);
+                                     # 'dense' = ship every P·cap slot (kept
+                                     # as the parity/benchmark oracle)
         self._gb = gb                # cached device-side graph block; pass a
                                      # shared one so many engines (a serving
                                      # fleet) reuse a single device copy
@@ -202,7 +127,9 @@ class GopherEngine:
     # ---------------- superstep body (backend-shared) ----------------
     def make_superstep(self, gb, num_queries: Optional[int] = None):
         """One BSP superstep over a partition batch gb (leading axis = local
-        partition count). Returns (state, inbox, changed, liters(P,), nsent).
+        partition count). Returns (state, inbox, changed, liters(P,), nsent,
+        wire) — ``wire`` is the superstep's shipped-slot count under the
+        engine's exchange mode (Gopher Wire telemetry).
 
         With ``num_queries=Q`` the program is query-batched: state/inbox
         leaves carry a QUERY-TRAILING (v_max, Q) shape per partition (Q rides
@@ -221,53 +148,94 @@ class GopherEngine:
             new_state, changed, liters = jax.vmap(
                 lambda s, i, g: prog.superstep(s, i, g, step, axes=axes),
                 in_axes=(0, 0, 0), axis_name=_VPART_AXIS)(state, inbox, gb)
-            inbox, nsent = exchange(new_state)
-            return new_state, inbox, changed, liters, nsent
+            inbox, nsent, wire = exchange(new_state)
+            return new_state, inbox, changed, liters, nsent, wire
 
         return sstep
 
     def make_exchange(self, gb, num_queries: Optional[int] = None):
-        """The mailbox half of a superstep: state -> (inbox, nsent). Split
-        out so the BSP loop can PRIME the first inbox from the INITIAL state
-        — without priming, superstep 0 computes with an empty inbox and
+        """The mailbox half of a superstep: state -> (inbox, nsent, wire).
+        Split out so the BSP loop can PRIME the first inbox from the INITIAL
+        state — without priming, superstep 0 computes with an empty inbox and
         treats every remote in-edge as contributing the ⊕-identity. For
         idempotent programs that only delays information one superstep, but
         for PageRank it silently dropped all remote mass from the first
-        Jacobi iteration (an error that decays only as damping^k)."""
+        Jacobi iteration (an error that decays only as damping^k).
+
+        Two wire disciplines (``self.exchange``):
+
+        'dense'    every (src, dst) pair ships its full cap-slot row every
+                   superstep — identity-filled when the pair is quiescent.
+                   wire = P · cap per local source row, unconditionally.
+        'compact'  frontier-compacted: each pair row is PACKED to a dense
+                   prefix of its active slots (source vertex in changed_v)
+                   plus a per-destination count vector; quiesced pairs ship
+                   count = 0. The receiver rebuilds fixed slot positions
+                   with a pure gather, so the combine — and every
+                   downstream bit — is IDENTICAL to the dense path.
+                   wire = Σ counts ∝ |frontier|.
+
+        ``wire`` models the count-prefixed PROTOCOL payload (what a real
+        transport would put on the network). In this XLA reproduction the
+        physical all_to_all buffers keep the dense P·cap geometry — static
+        shapes — and the compact mode additionally routes the slot-position
+        map, so on a real mesh its raw interconnect bytes are NOT smaller
+        today; making the buffer geometry track the frontier (ppermute
+        schedule / capacity tiers) is a named ROADMAP follow-on.
+        """
         prog = self.program
         cap = self.pg.mailbox_cap
         v_max = self.pg.v_max
         combine = prog.combine
         num_parts = self.pg.num_parts
         Q = num_queries
+        compact = self.exchange == "compact"
+
+        def route(x):
+            if self.backend == "local":
+                return msg.route_local(x)
+            return msg.route_shard_map(x, self.axis_name)
 
         def exchange(state):
             vals, send = jax.vmap(prog.messages)(state, gb)
-            # gather-form mailbox: slots PULL through the precomputed inverse
-            # routing plan — no runtime scatter, and only values travel
-            if Q is None:
-                build = functools.partial(msg.build_outbox_gather,
-                                          num_parts=num_parts, cap=cap,
-                                          combine=combine)
-            else:
-                build = functools.partial(msg.build_outbox_gather_batched,
-                                          num_parts=num_parts, cap=cap,
-                                          combine=combine)
-            ov = jax.vmap(build)(vals, send, gb["ob_inv"])
-            if self.backend == "local":
-                iv = msg.route_local(ov)
-            else:
-                iv = msg.route_shard_map(ov, self.axis_name)
+            nsent = jnp.sum(send).astype(jnp.int32)
             if Q is None:
                 comb = functools.partial(msg.combine_inbox_gather,
                                          v_max=v_max, combine=combine)
             else:
                 comb = functools.partial(msg.combine_inbox_gather_batched,
                                          v_max=v_max, cap=cap, combine=combine)
+            if not compact:
+                # gather-form dense mailbox: slots PULL through the inverse
+                # routing plan — no runtime scatter, only values travel
+                build = functools.partial(
+                    msg.build_outbox_gather if Q is None
+                    else msg.build_outbox_gather_batched,
+                    num_parts=num_parts, cap=cap, combine=combine)
+                iv = route(jax.vmap(build)(vals, send, gb["ob_inv"]))
+                p_local = gb["vmask"].shape[0]
+                wire = jnp.int32(p_local * num_parts * cap)
+            else:
+                build = functools.partial(
+                    msg.build_outbox_compact if Q is None
+                    else msg.build_outbox_compact_batched,
+                    num_parts=num_parts, cap=cap, combine=combine)
+                pvals, pinv, counts = jax.vmap(build)(vals, send,
+                                                      gb["ob_inv"])
+                # count-prefixed exchange: the packed prefixes and their
+                # slot-position maps travel; counts[d] is the header a real
+                # transport would read each prefix length from (here the
+                # PAD entries of pinv mark inactivity, so the header itself
+                # isn't routed — it feeds the wire telemetry and the
+                # piggybacked halt vote)
+                unpack = functools.partial(
+                    msg.unpack_slots if Q is None
+                    else msg.unpack_slots_batched, combine=combine)
+                iv = jax.vmap(unpack)(route(pvals), route(pinv))
+                wire = jnp.sum(counts).astype(jnp.int32)
             inbox = jax.vmap(comb)(iv, gb["ib_lo"], gb["ib_hub_idx"],
                                    gb["ib_hub"])
-            nsent = jnp.sum(send).astype(jnp.int32)
-            return inbox, nsent
+            return inbox, nsent, wire
 
         return exchange
 
@@ -286,12 +254,14 @@ class GopherEngine:
         state0 = jax.vmap(prog.init)(gb)
         # prime the mailbox with the INITIAL state's messages so superstep 0
         # computes against a consistent inbox (see make_exchange)
-        inbox0, nsent0 = self.make_exchange(gb, num_queries=Q)(state0)
+        inbox0, nsent0, wire0 = self.make_exchange(gb, num_queries=Q)(state0)
         if self.backend == "shard_map":
-            nsent0 = jax.lax.psum(nsent0, self.axis_name)
+            s0 = jax.lax.psum(jnp.stack([nsent0, wire0]), self.axis_name)
+            nsent0, wire0 = s0[0], s0[1]
         tele0 = dict(liters=jnp.zeros((p_local,), jnp.int32),
                      hist=jnp.zeros((self.max_supersteps,), jnp.int32),
-                     sent=nsent0)
+                     whist=jnp.zeros((self.max_supersteps,), jnp.int32),
+                     sent=nsent0, wire=wire0)
         if Q is not None:
             tele0["qsteps"] = jnp.zeros((Q,), jnp.int32)
 
@@ -301,26 +271,35 @@ class GopherEngine:
 
         def body(c):
             state, inbox, step, _, tele = c
-            state, inbox, changed, liters, nsent = sstep(state, inbox, step)
+            state, inbox, changed, liters, nsent, wire = sstep(state, inbox,
+                                                               step)
+            # the halt vote rides the same reduction as the wire counters:
+            # ONE fused psum per superstep carries [pairs-changed?, nsent,
+            # wire(, per-query changed)] — the count vector the compact
+            # exchange produces anyway — instead of a separate all-reduce
+            # round per counter.
             if Q is None:
-                any_changed = jnp.any(changed)
                 nchanged = jnp.sum(changed.astype(jnp.int32))
+                stats = jnp.stack([nchanged, nsent, wire])
                 if self.backend == "shard_map":
-                    any_changed = jax.lax.psum(any_changed.astype(jnp.int32),
-                                               self.axis_name) > 0
-                    nchanged = jax.lax.psum(nchanged, self.axis_name)
-                    nsent = jax.lax.psum(nsent, self.axis_name)
+                    stats = jax.lax.psum(stats, self.axis_name)
+                nchanged, nsent, wire = stats[0], stats[1], stats[2]
+                any_changed = nchanged > 0
             else:
                 changed_q = jnp.any(changed, axis=0).astype(jnp.int32)  # (Q,)
                 nchanged = jnp.sum(jnp.any(changed, axis=-1).astype(jnp.int32))
+                stats = jnp.concatenate(
+                    [jnp.stack([nchanged, nsent, wire]), changed_q])
                 if self.backend == "shard_map":
-                    changed_q = jax.lax.psum(changed_q, self.axis_name)
-                    nchanged = jax.lax.psum(nchanged, self.axis_name)
-                    nsent = jax.lax.psum(nsent, self.axis_name)
+                    stats = jax.lax.psum(stats, self.axis_name)
+                nchanged, nsent, wire = stats[0], stats[1], stats[2]
+                changed_q = stats[3:]
                 any_changed = jnp.any(changed_q > 0)
             new_tele = dict(liters=tele["liters"] + liters,
                             hist=tele["hist"].at[step].set(nchanged),
-                            sent=tele["sent"] + nsent)
+                            whist=tele["whist"].at[step].set(wire),
+                            sent=tele["sent"] + nsent,
+                            wire=tele["wire"] + wire)
             if Q is not None:
                 new_tele["qsteps"] = jnp.where(changed_q > 0, step + 1,
                                                tele["qsteps"])
@@ -373,16 +352,29 @@ class GopherEngine:
         for k, v in (extra or {}).items():
             gb[k] = jnp.asarray(v)
         state, steps, tele = self._runner(num_queries=Q, gb_example=gb)(gb)
-        return jax.tree.map(np.asarray, state), self._telemetry(steps, tele)
+        return jax.tree.map(np.asarray, state), self._telemetry(steps, tele,
+                                                                num_queries=Q)
 
-    def _telemetry(self, steps, tele) -> Telemetry:
+    def _telemetry(self, steps, tele, num_queries: Optional[int] = None,
+                   rounds: Optional[int] = None) -> Telemetry:
+        steps = int(steps)
+        wire = int(tele["wire"]) if "wire" in tele else 0
+        if rounds is None:
+            rounds = steps + 1                   # supersteps + inbox prime
         return Telemetry(
-            supersteps=int(steps),
+            supersteps=steps,
             local_iters=np.asarray(tele["liters"]).reshape(-1),
-            changed_hist=np.asarray(tele["hist"])[:int(steps)],
+            changed_hist=np.asarray(tele["hist"])[:steps],
             messages_sent=int(tele["sent"]) if np.ndim(tele["sent"]) == 0 else int(np.max(tele["sent"])),
             query_supersteps=(np.asarray(tele["qsteps"])
                               if "qsteps" in tele else None),
+            wire_hist=(np.asarray(tele["whist"])[:steps]
+                       if "whist" in tele else None),
+            wire_slots=wire,
+            bytes_on_wire=Telemetry.model_bytes(
+                wire, self.pg.num_parts, rounds=rounds,
+                cap=self.pg.mailbox_cap, num_queries=num_queries,
+                compact=self.exchange == "compact"),
         )
 
     def _runner(self, num_queries: Optional[int] = None, gb_example=None):
@@ -401,9 +393,9 @@ class GopherEngine:
         gb_sig = (tuple(sorted((k, v.shape, str(v.dtype))
                                for k, v in gb_example.items()))
                   if gb_example is not None else None)
-        key = (self.program, self.backend, num_queries, self.max_supersteps,
-               self.axis_name, self.mesh, self.pg.num_parts, self.pg.v_max,
-               self.pg.mailbox_cap, gb_sig)
+        key = (self.program, self.backend, self.exchange, num_queries,
+               self.max_supersteps, self.axis_name, self.mesh,
+               self.pg.num_parts, self.pg.v_max, self.pg.mailbox_cap, gb_sig)
         cached = _RUNNER_CACHE.get(key)
         if cached is None:
             # build the runner on a DETACHED engine holding only the scalars
@@ -416,6 +408,7 @@ class GopherEngine:
                                  mailbox_cap=self.pg.mailbox_cap)
             slim.program = self.program
             slim.backend = self.backend
+            slim.exchange = self.exchange
             slim.mesh = self.mesh
             slim.axis_name = self.axis_name
             slim.max_supersteps = self.max_supersteps
@@ -451,11 +444,14 @@ class GopherEngine:
 
             def body(c):
                 state, inbox, step, _, tele = c
-                state, inbox, changed, li, nsent = sstep(state, inbox, step)
+                state, inbox, changed, li, nsent, wire = sstep(state, inbox,
+                                                               step)
                 nchanged = jnp.sum(changed.astype(jnp.int32))
                 tele = dict(liters=tele["liters"] + li,
                             hist=tele["hist"].at[step].set(nchanged),
-                            sent=tele["sent"] + nsent)
+                            whist=tele["whist"].at[step].set(wire),
+                            sent=tele["sent"] + nsent,
+                            wire=tele["wire"] + wire)
                 return state, inbox, step + 1, ~jnp.any(changed), tele
 
             return jax.lax.while_loop(
@@ -472,18 +468,27 @@ class GopherEngine:
             step = jnp.int32(step)
         else:
             state = jax.vmap(prog.init)(gb)
-            inbox, nsent0 = jax.jit(self.make_exchange(gb))(state)
+            inbox, nsent0, wire0 = jax.jit(self.make_exchange(gb))(state)
             step = jnp.int32(0)
 
+        primed = int(step) == 0
+        start = int(step)
         tele = dict(liters=jnp.zeros((self.pg.num_parts,), jnp.int32),
                     hist=jnp.zeros((self.max_supersteps,), jnp.int32),
-                    sent=(nsent0 if int(step) == 0 else jnp.int32(0)))
+                    whist=jnp.zeros((self.max_supersteps,), jnp.int32),
+                    sent=(nsent0 if primed else jnp.int32(0)),
+                    wire=(wire0 if primed else jnp.int32(0)))
         done = False
         while not done and int(step) < self.max_supersteps:
             state, inbox, step, done_flag, tele = chunk(state, inbox, step, tele)
             done = bool(done_flag)
             ck.save({"state": state, "inbox": inbox}, int(step))
-        return jax.tree.map(np.asarray, state), self._telemetry(step, tele)
+        # after a resume the wire counters cover only THIS process's
+        # exchanges, so the byte model must count the same rounds (no prime
+        # ran, and pre-resume supersteps shipped in the previous process)
+        rounds = int(step) - start + (1 if primed else 0)
+        return jax.tree.map(np.asarray, state), self._telemetry(
+            step, tele, rounds=rounds)
 
     def _sharded_fn(self, num_queries: Optional[int] = None, gb_example=None):
         spec = P(self.axis_name)
@@ -503,7 +508,7 @@ class GopherEngine:
         state_spec = jax.tree.map(lambda _: spec,
                                   jax.eval_shape(lambda g: jax.vmap(self.program.init)(g),
                                                  gb_shapes))
-        tele_spec = dict(liters=spec, hist=rep, sent=rep)
+        tele_spec = dict(liters=spec, hist=rep, whist=rep, sent=rep, wire=rep)
         if num_queries is not None:
             tele_spec["qsteps"] = rep
         out_specs = (state_spec, rep, tele_spec)
@@ -530,7 +535,7 @@ class GopherEngine:
 
         def one_step(gb, state, inbox, step):
             sstep = self.make_superstep(gb)
-            st, ib, ch, li, ns = sstep(state, inbox, step)
+            st, ib, ch, li, ns, wire = sstep(state, inbox, step)
             return st, ib, ch
 
         f = compat.shard_map(one_step, mesh=self.mesh,

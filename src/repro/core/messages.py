@@ -165,6 +165,100 @@ def combine_inbox_gather_batched(in_vals: jnp.ndarray, ib_lo: jnp.ndarray,
     return _at_combine(y, idx, yh, combine)
 
 
+# ---------------- frontier-compacted sparse exchange (Gopher Wire) ----------
+# The dense mailbox above ships every (src, dst) pair's full cap-slot row
+# every superstep — identity-filled when the pair is quiescent. The compact
+# forms below PACK each pair row to a dense prefix of its active slots
+# (source vertex in the send set) plus a per-destination count header, so
+# the payload that travels scales with |frontier| instead of P·cap. The
+# compaction plan (kernels.ops.outbox_compact_plan: jnp oracle + Pallas
+# kernel) yields inverse permutations pfwd/pinv; the sender packs by
+# gathering through pfwd and the receiver reconstructs fixed slot positions
+# by gathering through pinv — the O(count) dual of scattering the prefix
+# back, so neither endpoint runs a runtime scatter. A real transport would
+# ship the count-length prefix + its slot ids and rebuild pinv in O(count)
+# on arrival; the byte model (core.engine.Telemetry.model_bytes) charges
+# exactly that. Reconstruction is exact, so every downstream bit — combine,
+# halt, results — is identical to the dense path.
+
+
+def build_outbox_compact(vals: jnp.ndarray, send_mask: jnp.ndarray,
+                         ob_inv: jnp.ndarray, num_parts: int, cap: int,
+                         combine: str, backend=None):
+    """Frontier-compacted outbox for ONE source partition. Returns
+    (pvals (num_parts, cap), pinv (num_parts, cap) int32,
+    counts (num_parts,) int32): per destination row, the packed prefix of
+    active slot values, the slot->prefix-position map, and the prefix
+    length (the wire header — Σ counts is this partition's payload)."""
+    from repro.kernels import ops
+    ident = COMBINE_IDENTITY[combine]
+    # the dense gather-form outbox IS the slot-value oracle; compaction only
+    # adds the activity mask + the pack permutation on top of it
+    slot_vals = build_outbox_gather(vals, send_mask, ob_inv, num_parts, cap,
+                                    combine)
+    valid = ob_inv != PAD
+    active = (valid & send_mask[jnp.where(valid, ob_inv, 0)]
+              ).reshape(num_parts, cap)
+    pfwd, pinv, counts = ops.outbox_compact_plan(active, backend=backend)
+    has = pfwd != PAD
+    pvals = jnp.where(has, jnp.take_along_axis(
+        slot_vals, jnp.where(has, pfwd, 0), axis=1), ident)
+    return pvals, pinv, counts
+
+
+def build_outbox_compact_batched(vals: jnp.ndarray, send_mask: jnp.ndarray,
+                                 ob_inv: jnp.ndarray, num_parts: int,
+                                 cap: int, combine: str, backend=None):
+    """Q-query compacted outbox, QUERY-TRAILING: vals/send are (r_max, Q). A
+    slot is active when ANY query lane of its source vertex is in the send
+    set, so the whole contiguous Q-vector ships (or doesn't) as one unit —
+    the count header stays per-slot, not per-lane. Returns
+    (pvals (num_parts, cap*Q), pinv (num_parts, cap), counts (num_parts,))."""
+    from repro.kernels import ops
+    ident = COMBINE_IDENTITY[combine]
+    Q = vals.shape[1]
+    slot_vals = build_outbox_gather_batched(
+        vals, send_mask, ob_inv, num_parts, cap,
+        combine).reshape(num_parts, cap, Q)
+    valid = ob_inv != PAD
+    safe = jnp.where(valid, ob_inv, 0)
+    active = (valid & jnp.any(send_mask, axis=-1)[safe]
+              ).reshape(num_parts, cap)
+    pfwd, pinv, counts = ops.outbox_compact_plan(active, backend=backend)
+    has = pfwd != PAD
+    pv = jnp.take_along_axis(slot_vals, jnp.where(has, pfwd, 0)[..., None],
+                             axis=1)
+    pvals = jnp.where(has[..., None], pv, ident).reshape(num_parts, cap * Q)
+    return pvals, pinv, counts
+
+
+def unpack_slots(pvals: jnp.ndarray, pinv: jnp.ndarray,
+                 combine: str) -> jnp.ndarray:
+    """Receiver side: (num_src, cap) packed prefixes + slot->position maps
+    -> the dense slot-value array the gather-form inbox combine expects.
+    A pure gather (each fixed slot pulls its packed value or the identity);
+    bit-identical to what the dense exchange would have delivered."""
+    ident = COMBINE_IDENTITY[combine]
+    valid = pinv != PAD
+    got = jnp.take_along_axis(pvals, jnp.where(valid, pinv, 0), axis=1)
+    return jnp.where(valid, got, ident)
+
+
+def unpack_slots_batched(pvals: jnp.ndarray, pinv: jnp.ndarray,
+                         combine: str) -> jnp.ndarray:
+    """Q-query receiver reconstruction: (num_src, cap*Q) packed + (num_src,
+    cap) maps -> (num_src, cap*Q) dense, each slot pulling its contiguous
+    Q-vector."""
+    ident = COMBINE_IDENTITY[combine]
+    num_src, cap = pinv.shape
+    Q = pvals.shape[1] // cap
+    pv = pvals.reshape(num_src, cap, Q)
+    valid = pinv != PAD
+    got = jnp.take_along_axis(pv, jnp.where(valid, pinv, 0)[..., None],
+                              axis=1)
+    return jnp.where(valid[..., None], got, ident).reshape(num_src, cap * Q)
+
+
 def route_local(outbox_vals: jnp.ndarray) -> jnp.ndarray:
     """Local backend: outbox (P_src, P_dst, cap) -> inbox-side (P_dst, P_src, cap).
     A transpose IS the all_to_all when every partition lives on one device."""

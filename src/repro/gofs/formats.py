@@ -41,6 +41,13 @@ def dedupe_edges_min(n: int, src: np.ndarray, dst: np.ndarray,
     return src[keep], dst[keep], wgt[keep]
 
 
+def grow_last_axis(arr: np.ndarray, extra: int, fill) -> np.ndarray:
+    """Pad the last axis by ``extra`` entries of ``fill`` — the lane-padded
+    growth step shared by ELL rows, mailbox slot maps, and feed lists."""
+    pad = [(0, 0)] * (arr.ndim - 1) + [(0, extra)]
+    return np.pad(arr, pad, constant_values=fill)
+
+
 def _cumcount(keys: np.ndarray) -> np.ndarray:
     """Position of each element within its key group (keys need not be sorted)."""
     if keys.size == 0:

@@ -40,7 +40,8 @@ import numpy as np
 import scipy.sparse as sp
 import scipy.sparse.csgraph as csgraph
 
-from repro.gofs.formats import (PAD, PartitionedGraph, dedupe_edges_min)
+from repro.gofs.formats import (PAD, PartitionedGraph, dedupe_edges_min,
+                                grow_last_axis)
 from repro.gofs.store import GoFSStore
 
 
@@ -95,6 +96,16 @@ class DeltaResult:
     # layer expands these to affected sub-graphs via the meta-graph.
     dirty_remove: np.ndarray
     stats: dict
+    # zero-repack graph block (core.blocks.patch_host_block output): present
+    # when the caller passed the previous version's HOST block — the derived
+    # arrays (binned ELL, mailbox inverse maps) patched in O(|delta|)
+    # instead of re-packed from scratch.
+    block: Optional[dict] = None
+    # the patch-event log (touched_rows, rdel, radd): replay it with
+    # core.blocks.patch_host_block to patch FURTHER replicas of the previous
+    # version's block (a fleet holding per-mesh copies patches each in
+    # O(|delta|) from one apply_delta).
+    events: Optional[tuple] = None
 
 
 def _mirror(src, dst, wgt=None):
@@ -103,11 +114,6 @@ def _mirror(src, dst, wgt=None):
     if wgt is None:
         return s, d
     return s, d, np.concatenate([wgt, wgt])
-
-
-def _grow_last_axis(arr, extra, fill):
-    pad = [(0, 0)] * (arr.ndim - 1) + [(0, extra)]
-    return np.pad(arr, pad, constant_values=fill)
 
 
 def _local_subgraphs(nbr: np.ndarray, vmask: np.ndarray, parts):
@@ -142,7 +148,8 @@ def _local_subgraphs(nbr: np.ndarray, vmask: np.ndarray, parts):
 
 
 def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
-                directed: bool = False, lane_pad: int = 8) -> DeltaResult:
+                directed: bool = False, lane_pad: int = 8,
+                block: Optional[dict] = None) -> DeltaResult:
     """Produce the next graph version WITHOUT re-running the GoFS build.
 
     Host-side O(|delta|) patching of the device layout: local inserts fill
@@ -150,6 +157,15 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
     only when full), remote inserts reuse freed mailbox slots of their
     partition pair before widening the capacity, and sub-graph ids are
     rediscovered only in partitions whose local topology changed.
+
+    ``block``: the previous version's HOST graph block
+    (core.blocks.host_graph_block). When given, the derived engine arrays
+    (binned ELL adjacency, mailbox inverse maps, outbox slot map) are
+    patched in O(|delta|) too and returned as ``DeltaResult.block`` — the
+    zero-repack versioned-block path. The mailbox cap then becomes STICKY
+    (grows lane-padded on overflow, never shrinks) so the patched block's
+    flat slot positions — and the compiled BSP loop keyed on its shapes —
+    survive the version bump.
     """
     n = pg.n_global
     P, v_max = pg.num_parts, pg.v_max
@@ -182,6 +198,10 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
     dirty_ins = np.zeros((P, v_max), bool)
     dirty_rem = np.zeros((P, v_max), bool)
     touched_local = set()
+    # zero-repack event log (consumed by core.blocks.patch_host_block)
+    touched_mask = np.zeros((P, v_max), bool)  # local rows whose nbr/wgt changed
+    ev_rdel = []                # [(src_p, dst_p, dst_v, slot)]
+    ev_radd = []                # [(src_p, dst_p, dst_v, slot, edge_idx)]
     stats = dict(inserted=0, weight_updated=0, removed=0, remove_missed=0)
 
     # ---- removals first (an insert re-adding a removed edge nets to insert)
@@ -196,6 +216,7 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
             nbr[pv, lv, j[0]] = PAD
             wgt[pv, lv, j[0]] = 0.0
             touched_local.add(pv)
+            touched_mask[pv, lv] = True
         else:
             m = np.flatnonzero((re_src[pu] == lu) & (re_dp[pu] == pv)
                                & (re_dl[pu] == lv))
@@ -203,6 +224,7 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
                 stats["remove_missed"] += 1
                 continue
             # free the slot; its (pair, slot) id becomes reusable by inserts
+            ev_rdel.append((pu, pv, lv, int(re_slot[pu, m[0]])))
             re_src[pu, m[0]] = PAD
             re_wgt[pu, m[0]] = 0.0
         out_degree[pu, lu] -= 1
@@ -219,15 +241,17 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
             if j.size:                          # duplicate insert: min policy
                 wgt[pv, lv, j[0]] = min(float(wgt[pv, lv, j[0]]), float(w))
                 stats["weight_updated"] += 1
+                touched_mask[pv, lv] = True
                 continue
             free = np.flatnonzero(nbr[pv, lv] == PAD)
             if free.size == 0:
-                nbr = _grow_last_axis(nbr, lane_pad, PAD)
-                wgt = _grow_last_axis(wgt, lane_pad, 0.0)
+                nbr = grow_last_axis(nbr, lane_pad, PAD)
+                wgt = grow_last_axis(wgt, lane_pad, 0.0)
                 free = np.flatnonzero(nbr[pv, lv] == PAD)
             nbr[pv, lv, free[0]] = lu
             wgt[pv, lv, free[0]] = w
             touched_local.add(pv)
+            touched_mask[pv, lv] = True
         else:
             m = np.flatnonzero((re_src[pu] == lu) & (re_dp[pu] == pv)
                                & (re_dl[pu] == lv))
@@ -237,11 +261,11 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
                 continue
             free = np.flatnonzero(re_src[pu] == PAD)
             if free.size == 0:
-                re_src = _grow_last_axis(re_src, lane_pad, PAD)
-                re_wgt = _grow_last_axis(re_wgt, lane_pad, 0.0)
-                re_dp = _grow_last_axis(re_dp, lane_pad, 0)
-                re_dl = _grow_last_axis(re_dl, lane_pad, 0)
-                re_slot = _grow_last_axis(re_slot, lane_pad, 0)
+                re_src = grow_last_axis(re_src, lane_pad, PAD)
+                re_wgt = grow_last_axis(re_wgt, lane_pad, 0.0)
+                re_dp = grow_last_axis(re_dp, lane_pad, 0)
+                re_dl = grow_last_axis(re_dl, lane_pad, 0)
+                re_slot = grow_last_axis(re_slot, lane_pad, 0)
                 free = np.flatnonzero(re_src[pu] == PAD)
             e = free[0]
             # smallest slot unused by live edges of the (pu, pv) pair —
@@ -256,12 +280,20 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
             re_dp[pu, e] = pv
             re_dl[pu, e] = lv
             re_slot[pu, e] = slot
+            ev_radd.append((pu, pv, lv, slot, int(e)))
         out_degree[pu, lu] += 1
         stats["inserted"] += 1
 
-    # ---- mailbox capacity: exact fit over live remote edges
+    # ---- mailbox capacity: exact fit over live remote edges; STICKY when
+    # patching a block (flat slot positions must stay valid — growth is
+    # lane-padded so one overflowing pair doesn't recompile every version)
     live = re_src != PAD
     cap = int(re_slot[live].max()) + 1 if live.any() else 1
+    if block is not None:
+        cap_block = block["ob_inv"].shape[1] // P
+        if cap > cap_block:
+            cap = ((cap + lane_pad - 1) // lane_pad) * lane_pad
+        cap = max(cap, cap_block)
 
     # ---- sub-graph rediscovery, touched partitions only (one scipy call)
     for p, sg_p, n_p in _local_subgraphs(nbr, pg.vmask, sorted(touched_local)):
@@ -278,8 +310,15 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
     )
     stats["version"] = new_pg.version
     stats["touched_partitions"] = len(touched_local)
+    touched_rows = np.argwhere(touched_mask)       # sorted (p, v) pairs
+    new_block = None
+    if block is not None:
+        from repro.core.blocks import patch_host_block
+        new_block = patch_host_block(block, new_pg, touched_rows,
+                                     ev_rdel, ev_radd, lane_pad=lane_pad)
     return DeltaResult(pg=new_pg, dirty_insert=dirty_ins,
-                       dirty_remove=dirty_rem, stats=stats)
+                       dirty_remove=dirty_rem, stats=stats, block=new_block,
+                       events=(touched_rows, ev_rdel, ev_radd))
 
 
 class TemporalStore(GoFSStore):

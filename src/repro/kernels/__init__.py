@@ -4,14 +4,19 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mamba_scan import mamba1_scan_pallas, mamba1_scan_ref
 from repro.kernels.ops import (bin_rows_by_degree, binned_ell_spmv_multi,
                                binned_ell_spmv_multi_frontier, multibin_spmv,
-                               semiring_spmv, semiring_spmv_frontier)
-from repro.kernels.ref import semiring_spmv_frontier_ref, semiring_spmv_ref
+                               outbox_compact_plan, semiring_spmv,
+                               semiring_spmv_frontier)
+from repro.kernels.outbox_compact import outbox_compact_plan_pallas
+from repro.kernels.ref import (outbox_compact_plan_ref,
+                               semiring_spmv_frontier_ref, semiring_spmv_ref)
 from repro.kernels.semiring_spmv import (semiring_spmv_frontier_pallas,
                                          semiring_spmv_pallas)
 
 __all__ = ["semiring_spmv", "semiring_spmv_ref", "semiring_spmv_pallas",
            "semiring_spmv_frontier", "semiring_spmv_frontier_ref",
            "semiring_spmv_frontier_pallas",
+           "outbox_compact_plan", "outbox_compact_plan_ref",
+           "outbox_compact_plan_pallas",
            "binned_ell_spmv_multi", "binned_ell_spmv_multi_frontier",
            "bin_rows_by_degree", "multibin_spmv", "flash_attention_pallas",
            "mamba1_scan_pallas", "mamba1_scan_ref"]

@@ -20,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.gofs.formats import PAD
-from repro.kernels.ref import (SEMIRINGS, semiring_spmv_frontier_ref,
+from repro.kernels.outbox_compact import outbox_compact_plan_pallas
+from repro.kernels.ref import (SEMIRINGS, outbox_compact_plan_ref,
+                               semiring_spmv_frontier_ref,
                                semiring_spmv_ref)
 from repro.kernels.semiring_spmv import (semiring_spmv_frontier_pallas,
                                          semiring_spmv_pallas)
@@ -55,6 +57,22 @@ def semiring_spmv_frontier(x: jnp.ndarray, frontier: jnp.ndarray,
     if backend == "pallas":
         return semiring_spmv_frontier_pallas(
             x, frontier, nbr, wgt, semiring, block_v=block_v,
+            interpret=jax.default_backend() != "tpu")
+    raise ValueError(f"unknown backend {backend}")
+
+
+def outbox_compact_plan(active: jnp.ndarray, backend: Optional[str] = None,
+                        block_r: int = 8):
+    """Frontier-compaction plan for the sparse mailbox exchange (Gopher
+    Wire): (R, cap) active-slot mask -> (pfwd, pinv, counts). See
+    kernels.ref.outbox_compact_plan_ref for the contract; the Pallas path
+    is bit-identical (stable ascending order both ways)."""
+    backend = backend or _default_backend()
+    if backend == "jnp":
+        return outbox_compact_plan_ref(active)
+    if backend == "pallas":
+        return outbox_compact_plan_pallas(
+            active, block_r=block_r,
             interpret=jax.default_backend() != "tpu")
     raise ValueError(f"unknown backend {backend}")
 

@@ -36,6 +36,37 @@ def semiring_spmv_ref(x: jnp.ndarray, nbr: jnp.ndarray, wgt: jnp.ndarray,
     raise ValueError(f"unknown semiring {semiring}")
 
 
+def outbox_compact_plan_ref(active: jnp.ndarray):
+    """Per-row compaction plan for the frontier-compacted outbox (Gopher
+    Wire). ``active``: (R, cap) bool — mailbox slots whose source vertex is
+    in the send set this superstep. Returns
+
+      pfwd   (R, cap) int32  packed position j -> slot id (PAD past count):
+                             the j-th ACTIVE slot in ascending slot order —
+                             the sender gathers values through this to build
+                             the dense prefix that travels
+      pinv   (R, cap) int32  slot id -> packed position (PAD if inactive):
+                             the receiver reconstructs fixed slot positions
+                             through this with a pure gather (the O(count)
+                             dual of scattering the prefix back)
+      counts (R,)   int32    prefix length per destination row — the wire
+                             header; Σ counts is the superstep's payload
+
+    pfwd and pinv are inverse permutations restricted to the active set;
+    both derive from the same stable order so the Pallas kernel and this
+    oracle are bit-identical.
+    """
+    cap = active.shape[-1]
+    counts = jnp.sum(active, axis=-1).astype(jnp.int32)
+    # stable sort of ~active: active slots first, ascending slot id
+    order = jnp.argsort(~active, axis=-1, stable=True).astype(jnp.int32)
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    pfwd = jnp.where(j < counts[:, None], order, PAD)
+    csum = jnp.cumsum(active.astype(jnp.int32), axis=-1)
+    pinv = jnp.where(active, csum - 1, PAD)
+    return pfwd, pinv, counts
+
+
 def semiring_spmv_frontier_ref(x: jnp.ndarray, frontier: jnp.ndarray,
                                nbr: jnp.ndarray, wgt: jnp.ndarray,
                                semiring: str):

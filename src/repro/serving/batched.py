@@ -34,6 +34,8 @@ from repro.kernels import ops
 
 QUERY_INIT_KEY = "qinit"   # (P, v_max, Q) float32 initial semiring state
 QUERY_SEED_KEY = "qseed"   # (P, v_max, Q) float32 PPR personalization vectors
+QUERY_X0_KEY = "qx0"       # (P, v_max, Q) float32 previous fixpoint (resume)
+QUERY_FRONTIER_KEY = "qfrontier0"  # (P, v_max, Q) bool dirty seed (resume)
 
 
 def _ew_combine(combine: str, a, b):
@@ -56,12 +58,21 @@ class BatchedSemiringProgram:
     max_local_iters: Optional[int] = None
     fixpoint_unroll: int = 2            # sweeps fused per convergence check;
                                         # overshoot is a no-op for idempotent ⊕
+    # resume=True restarts all Q lanes from a previous fixpoint:
+    # gb["qx0"] carries the prior per-query states and gb["qfrontier0"] the
+    # per-query dirty seeds (gofs.temporal / algorithms.incremental) — the
+    # batched mirror of SemiringProgram's incremental restart, used for
+    # landmark-cache maintenance after an apply_delta.
+    resume: bool = False
 
     @property
     def combine(self) -> str:
         return "min" if self.semiring == "min_plus" else "max"
 
     def init(self, gb) -> dict:
+        if self.resume:
+            seed = gb[QUERY_FRONTIER_KEY] & gb["vmask"][:, None]
+            return {"x": gb[QUERY_X0_KEY], "changed_v": seed, "frontier": seed}
         x0 = gb[self.init_key]                        # (v_max, Q)
         seed = jnp.broadcast_to(gb["vmask"][:, None], x0.shape)
         return {"x": x0, "changed_v": seed, "frontier": seed}

@@ -92,12 +92,16 @@ def choose_landmarks(pg: PartitionedGraph, num: int,
 class LandmarkCache:
     """L exact landmark distance vectors for one graph; answers approximate
     SSSP with O(L·n) numpy and no engine run. ``graph_version`` records the
-    PartitionedGraph version the vectors were computed at — the service
-    drops (and optionally rebuilds) the cache when a delta bumps it."""
+    PartitionedGraph version the vectors were computed at. On a delta the
+    service no longer flushes the tier: ``stale_landmarks`` proves which
+    vectors a delta could have changed (O(L·|delta|) against the cached
+    distances) and ``refresh`` recomputes ONLY those, resuming each from its
+    previous fixpoint via the batched dirty-frontier restart."""
     landmarks: np.ndarray          # (L,) global vertex ids
     dist: np.ndarray               # (L, n) exact distances from each landmark
     graph_version: int = 0
     queries_answered: int = 0
+    refreshed_landmarks: int = 0   # vectors recomputed at the last refresh()
 
     @property
     def num_landmarks(self) -> int:
@@ -121,6 +125,62 @@ class LandmarkCache:
         return LandmarkCache(landmarks=lm,
                              dist=gather_query_results(pg, state["x"]),
                              graph_version=pg.version)
+
+    def stale_landmarks(self, delta, directed: bool = False,
+                        removed: Optional[int] = None) -> np.ndarray:
+        """(L,) bool: which landmark vectors ``delta`` may have changed.
+
+        A landmark's SSSP fixpoint survives an insert-only delta iff no
+        inserted edge relaxes under its CURRENT distances — the standard
+        first-improved-vertex argument: if some distance strictly improved,
+        the minimal improved endpoint's last path edge is an inserted edge
+        whose tail kept its old distance, so that edge relaxes against the
+        old vector. Checking every inserted edge against the cached vector
+        is therefore exact (for non-negative weights), O(L·|delta|), and
+        needs no engine run. An insert that only re-adds an edge at a
+        higher weight can flag a false positive (the min duplicate policy
+        keeps the old weight) — conservative, never wrong. Removals can
+        lengthen paths in ways the cached vector cannot bound, so any
+        REALIZED removal marks every landmark stale; ``removed`` (the
+        applied count, ``DeltaResult.stats['removed']``) lets a delta whose
+        removals all MISSED stay on the cheap insert-only test."""
+        L = self.num_landmarks
+        if (delta.num_removes if removed is None else removed) > 0:
+            return np.ones(L, bool)
+        if delta.num_inserts == 0:
+            return np.zeros(L, bool)
+        u = np.asarray(delta.insert_src, np.int64)
+        v = np.asarray(delta.insert_dst, np.int64)
+        w = np.asarray(delta.insert_wgt, np.float32)
+        du, dv = self.dist[:, u], self.dist[:, v]          # (L, Ni)
+        relax = du + w[None, :] < dv
+        if not directed:
+            relax |= dv + w[None, :] < du
+        return np.any(relax, axis=1)
+
+    def refresh(self, pg: PartitionedGraph, delta_result, delta,
+                directed: bool = False, backend: str = "local", mesh=None,
+                gb=None) -> "LandmarkCache":
+        """The post-delta maintenance path: keep every landmark vector the
+        delta provably couldn't touch, and resume the stale ones from their
+        previous fixpoints in one batched dirty-frontier restart
+        (algorithms.incremental.incremental_sssp_batched) instead of
+        re-running the full bootstrap SSSP. ``gb`` shares the serving
+        fleet's (zero-repack-patched) device graph block."""
+        from repro.algorithms.incremental import incremental_sssp_batched
+        stale = self.stale_landmarks(
+            delta, directed=directed,
+            removed=delta_result.stats.get("removed"))
+        dist = self.dist.copy()
+        if stale.any():
+            fresh, _ = incremental_sssp_batched(
+                pg, self.landmarks[stale], self.dist[stale], delta_result,
+                backend=backend, mesh=mesh, gb=gb)
+            dist[stale] = fresh
+        return LandmarkCache(landmarks=self.landmarks, dist=dist,
+                             graph_version=pg.version,
+                             queries_answered=self.queries_answered,
+                             refreshed_landmarks=int(stale.sum()))
 
     def approx_sssp(self, source: int) -> np.ndarray:
         """(n,) UPPER bounds on d(source, ·): min over landmarks of the

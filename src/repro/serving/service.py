@@ -27,7 +27,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import GopherEngine, graph_block
+from repro.core import GopherEngine, device_block, host_graph_block
 from repro.gofs.formats import PartitionedGraph
 from repro.serving import planner as pl
 from repro.serving.batched import (BatchedPersonalizedPageRank,
@@ -101,7 +101,8 @@ class GraphQueryService:
         self.cache = ResultCache(cache_capacity)
         self.stats = ServiceStats()
         self.landmark_caches: Dict[str, LandmarkCache] = {}
-        self._gb: Dict[str, dict] = {}
+        self._gb: Dict[str, dict] = {}       # device graph blocks
+        self._host_gb: Dict[str, dict] = {}  # patchable host twins (temporal)
         self._engines: Dict[tuple, GopherEngine] = {}
         self._pending: List[Request] = []
         self._next_ticket = 0
@@ -120,10 +121,14 @@ class GraphQueryService:
         shared device block (shapes may have changed), and the landmark
         cache. Invalidation is UNCONDITIONAL for the graph name — the new
         graph may carry the same version number as the old one (e.g. two
-        independent version-0 builds), so version equality proves nothing."""
+        independent version-0 builds), so version equality proves nothing.
+        (``apply_delta`` is the cheaper path for version bumps that came
+        from an edge delta: it patches blocks and landmark vectors instead
+        of dropping them.)"""
         self.graphs[name] = pg
         self.cache.invalidate(lambda k: k[0][0] == name)
         self._gb.pop(name, None)
+        self._host_gb.pop(name, None)
         self._engines = {k: e for k, e in self._engines.items()
                          if k[0] != name}
         self.landmark_caches.pop(name, None)
@@ -131,15 +136,35 @@ class GraphQueryService:
     def apply_delta(self, name: str, delta, directed: bool = False,
                     rebuild_landmarks: bool = False):
         """Ingest an edge-delta batch for a registered graph (gofs.temporal):
-        bumps the graph version, invalidates caches/engines, optionally
-        rebuilds the landmark tier. Returns the DeltaResult so callers can
-        chain incremental analytics off the dirty seeds."""
+        bumps the graph version and invalidates the exact-result cache, but
+        — unlike ``update_graph`` — keeps the derived state warm:
+
+          - the graph block is ZERO-REPACK patched in O(|delta|)
+            (core.blocks.patch_host_block via ``apply_delta(block=...)``)
+            and re-installed, so freshly pooled engines skip the per-version
+            re-pack AND, when no padded shape changed, re-enter the shared
+            compiled BSP loop;
+          - with ``rebuild_landmarks=True`` the landmark tier is MAINTAINED,
+            not rebuilt: vectors the delta provably couldn't change stay
+            valid (LandmarkCache.stale_landmarks), the rest resume from
+            their previous fixpoints via the batched dirty-frontier restart.
+
+        Returns the DeltaResult so callers can chain incremental analytics
+        off the dirty seeds."""
         from repro.gofs.temporal import apply_delta as _apply
         old_lc = self.landmark_caches.get(name)
-        res = _apply(self.graphs[name], delta, directed=directed)
+        host_gb = self._host_gb.get(name)
+        if host_gb is None:
+            host_gb = host_graph_block(self.graphs[name])
+        res = _apply(self.graphs[name], delta, directed=directed,
+                     block=host_gb)
         self.update_graph(name, res.pg)
+        self._host_gb[name] = res.block
+        self._gb[name] = device_block(res.block)
         if rebuild_landmarks and old_lc is not None:
-            self.enable_landmarks(name, num_landmarks=old_lc.num_landmarks)
+            self.landmark_caches[name] = old_lc.refresh(
+                res.pg, res, delta, directed=directed, backend=self.backend,
+                mesh=self.mesh, gb=self._gb[name])
         return res
 
     # ---------------- request intake ----------------
@@ -232,7 +257,12 @@ class GraphQueryService:
 
     def _graph_block(self, graph: str) -> dict:
         if graph not in self._gb:
-            self._gb[graph] = graph_block(self.graphs[graph])
+            host = self._host_gb.get(graph)
+            if host is None:
+                host = host_graph_block(self.graphs[graph])
+                self._host_gb[graph] = host   # keep the patchable twin for
+                                              # the next apply_delta
+            self._gb[graph] = device_block(host)
         return self._gb[graph]
 
     def _engine(self, graph: str, family: str, Q: int) -> GopherEngine:
