@@ -141,13 +141,23 @@ def _mailbox_inverse(pg: PartitionedGraph, lane_pad: int = 8):
 def host_graph_block(pg: PartitionedGraph) -> dict:
     """Cold-build the HOST (numpy) graph block: raw fields + binned adjacency
     + mailbox inverse maps. This is the representation ``patch_host_block``
-    edits in O(|delta|) per version."""
+    edits in O(|delta|) per version.
+
+    The block also carries the Gopher Mesh per-pair traffic profile
+    ``wire_ewma`` (P, P float32) — an EWMA of observed packed slot counts
+    per exchange round, seeded here with the STRUCTURAL slot occupancy (the
+    worst case any round can ship, so a plan built from a fresh block never
+    overflows). Runs fold observations in via core.tiers.update_profile;
+    gofs.temporal.apply_delta pre-announces a delta's dirty frontier into
+    it; patch_host_block carries it across versions untouched."""
+    from repro.core.tiers import occupancy_from_ob_inv
     gb = {k: np.asarray(getattr(pg, k)) for k in _GB_FIELDS}
     gb["part_index"] = np.arange(pg.num_parts, dtype=np.int32)
     (gb["nbr_lo"], gb["wgt_lo"], gb["adj_hub_idx"],
      gb["adj_hub_nbr"], gb["adj_hub_wgt"]) = _binned_adjacency(pg)
     (gb["ob_inv"], gb["ib_lo"],
      gb["ib_hub_idx"], gb["ib_hub"]) = _mailbox_inverse(pg)
+    gb["wire_ewma"] = occupancy_from_ob_inv(gb["ob_inv"]).astype(np.float32)
     for name, arr in pg.attrs.items():
         gb[f"attr_{name}"] = np.asarray(arr)
     return gb

@@ -20,6 +20,16 @@ Two backends share every line of superstep logic:
                 virtual partitions)
   'shard_map' — partitions sharded over a mesh axis; mailbox routed with a
                 real all_to_all; halt via psum (multi-chip / dry-run path)
+
+Four wire disciplines share both backends (``exchange=``, see make_exchange):
+  'dense'     every pair ships its full cap row (the parity oracle; also the
+              fastest choice where the physical wire is a single-host
+              transpose, hence the 'auto' pick on 'local')
+  'compact'   frontier-compacted protocol payload over the dense physical
+              buffer (Gopher Wire)
+  'tiered'    capacity-tiered PHYSICAL buffers routed per pair tier (Gopher
+              Mesh): the geometry XLA moves tracks the frontier
+  'auto'      the default: 'dense' on 'local', 'tiered' on 'shard_map'
 """
 from __future__ import annotations
 
@@ -35,7 +45,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core import compat
 from repro.core import messages as msg
 from repro.core.blocks import graph_block  # noqa: F401 (re-exported API)
+from repro.core.tiers import TierPlan
 from repro.gofs.formats import PartitionedGraph
+from repro.kernels import ops
 
 # the vmapped partition axis gets a collective name so programs can take
 # GLOBAL reductions (PageRank dangling mass / L1 halt) with a plain psum —
@@ -67,22 +79,43 @@ class Telemetry:
     # query-batched runs only: per-query superstep at which the query last
     # changed (its individual convergence point — it stops sending after this)
     query_supersteps: Optional[np.ndarray] = None
-    # wire model (Gopher Wire): mailbox slots actually shipped per superstep
-    # — under the compact exchange this is the frontier's slot count; under
-    # the dense exchange it is the constant P²·cap. wire_hist[s] covers the
-    # exchange that ran at the END of superstep s; the pre-loop inbox prime
-    # is accounted in wire_slots but has no superstep to land in.
+    # wire accounting, per exchange discipline:
+    #   'dense'   PHYSICAL: the constant P²·cap buffer geometry per round.
+    #   'tiered'  PHYSICAL: the tier schedule's routed buffer geometry per
+    #             round (core.tiers.TierSchedule.round_slots) — what the
+    #             interconnect actually carries; static per tier plan, and
+    #             it tracks the frontier through the traffic profile.
+    #   'compact' MODELED protocol payload (Σ packed counts): what a
+    #             count-prefixed transport would ship. The compact mode's
+    #             PHYSICAL buffers keep the dense geometry plus a slot map
+    #             (that gap is exactly what the tiered mode closes).
+    # wire_hist[s] covers the exchange that ran at the END of superstep s;
+    # the pre-loop inbox prime is accounted in wire_slots but has no
+    # superstep to land in.
     wire_hist: Optional[np.ndarray] = None     # (supersteps,) int
     wire_slots: int = 0                        # total slots shipped (incl. prime)
-    bytes_on_wire: int = 0                     # modeled payload bytes (see below)
+    bytes_on_wire: int = 0                     # wire bytes under the same model
+    # Gopher Mesh: per-pair packed-count totals (the traffic profile's
+    # observation — feed to core.tiers.update_profile) and the tiered run's
+    # overflow record
+    exchange: str = ""                         # resolved discipline of the run
+    pair_slots: Optional[np.ndarray] = None    # (P, P) Σ packed counts
+    pair_rounds: int = 0                       # exchange rounds pair_slots
+                                               # covers (≠ supersteps+1 after
+                                               # a dense fallback retry)
+    pair_overflow: Optional[np.ndarray] = None # (P, P) #supersteps overflowed
+    spills: int = 0                            # Σ pair_overflow (tier misses)
+    escalations: int = 0                       # pairs promoted after spills
+    retried: bool = False                      # dense fallback retry ran
 
     @staticmethod
     def model_bytes(slots: int, num_parts: int, rounds: int, cap: int,
                     num_queries: Optional[int], compact: bool) -> int:
-        """The comm-volume model: per round the dense exchange ships every
-        pair row — P² · cap · Q values at 4 B — while the compact exchange
-        ships, per pair, a count header (4 B) plus count packed slots at
-        (4·Q value bytes + 4 slot-id bytes) each; payload ∝ |frontier|."""
+        """The dense/compact comm-volume model: per round the dense exchange
+        ships every pair row — P² · cap · Q values at 4 B — while the
+        compact exchange ships, per pair, a count header (4 B) plus count
+        packed slots at (4·Q value bytes + 4 slot-id bytes) each; payload ∝
+        |frontier|. (Tiered runs use TierSchedule.round_bytes instead.)"""
         q = num_queries or 1
         if not compact:
             return rounds * num_parts * num_parts * cap * q * 4
@@ -95,9 +128,9 @@ class GopherEngine:
     def __init__(self, pg: PartitionedGraph, program, backend: str = "local",
                  mesh=None, axis_name: str = "parts",
                  max_supersteps: int = 4096, gb: Optional[dict] = None,
-                 exchange: str = "compact"):
+                 exchange: str = "auto", tier_plan: Optional[TierPlan] = None):
         assert backend in ("local", "shard_map")
-        assert exchange in ("compact", "dense")
+        assert exchange in ("auto", "compact", "dense", "tiered")
         if backend == "shard_map":
             assert mesh is not None
             d = mesh.shape[axis_name]
@@ -108,10 +141,22 @@ class GopherEngine:
         self.mesh = mesh
         self.axis_name = axis_name
         self.max_supersteps = max_supersteps
-        self.exchange = exchange     # 'compact' = frontier-compacted sparse
-                                     # exchange (Gopher Wire, the default);
-                                     # 'dense' = ship every P·cap slot (kept
-                                     # as the parity/benchmark oracle)
+        # wire discipline. 'auto' resolves per backend: on 'local' the
+        # physical "wire" is a single-device transpose, so the dense path is
+        # both the fastest and the smallest — any compaction plan is pure
+        # overhead there; on 'shard_map' the tiered exchange makes the
+        # routed buffers track the frontier. 'dense' stays the parity /
+        # benchmark oracle; 'compact' is Gopher Wire's protocol-payload
+        # compaction over dense physical buffers.
+        self.exchange_requested = exchange
+        if exchange == "auto":
+            exchange = "dense" if backend == "local" else "tiered"
+        self.exchange = exchange
+        if self.exchange == "tiered" and tier_plan is None:
+            # structural default plan: every pair's width covers its maximum
+            # possible slot count, so it can never overflow (see TierPlan)
+            tier_plan = TierPlan.from_graph(pg)
+        self.tier_plan = tier_plan if self.exchange == "tiered" else None
         self._gb = gb                # cached device-side graph block; pass a
                                      # shared one so many engines (a serving
                                      # fleet) reuse a single device copy
@@ -128,8 +173,9 @@ class GopherEngine:
     def make_superstep(self, gb, num_queries: Optional[int] = None):
         """One BSP superstep over a partition batch gb (leading axis = local
         partition count). Returns (state, inbox, changed, liters(P,), nsent,
-        wire) — ``wire`` is the superstep's shipped-slot count under the
-        engine's exchange mode (Gopher Wire telemetry).
+        wire, extras) — ``wire`` is the superstep's shipped-slot count under
+        the engine's exchange mode and ``extras`` carries the per-pair wire
+        telemetry the mode produces (see make_exchange).
 
         With ``num_queries=Q`` the program is query-batched: state/inbox
         leaves carry a QUERY-TRAILING (v_max, Q) shape per partition (Q rides
@@ -148,40 +194,55 @@ class GopherEngine:
             new_state, changed, liters = jax.vmap(
                 lambda s, i, g: prog.superstep(s, i, g, step, axes=axes),
                 in_axes=(0, 0, 0), axis_name=_VPART_AXIS)(state, inbox, gb)
-            inbox, nsent, wire = exchange(new_state)
-            return new_state, inbox, changed, liters, nsent, wire
+            inbox, nsent, wire, extras = exchange(new_state)
+            return new_state, inbox, changed, liters, nsent, wire, extras
 
         return sstep
 
     def make_exchange(self, gb, num_queries: Optional[int] = None):
-        """The mailbox half of a superstep: state -> (inbox, nsent, wire).
-        Split out so the BSP loop can PRIME the first inbox from the INITIAL
-        state — without priming, superstep 0 computes with an empty inbox and
-        treats every remote in-edge as contributing the ⊕-identity. For
-        idempotent programs that only delays information one superstep, but
-        for PageRank it silently dropped all remote mass from the first
+        """The mailbox half of a superstep: state -> (inbox, nsent, wire,
+        extras). Split out so the BSP loop can PRIME the first inbox from the
+        INITIAL state — without priming, superstep 0 computes with an empty
+        inbox and treats every remote in-edge as contributing the ⊕-identity.
+        For idempotent programs that only delays information one superstep,
+        but for PageRank it silently dropped all remote mass from the first
         Jacobi iteration (an error that decays only as damping^k).
 
-        Two wire disciplines (``self.exchange``):
+        Three wire disciplines (``self.exchange``; 'auto' resolved at
+        construction to 'dense' on local, 'tiered' on shard_map):
 
         'dense'    every (src, dst) pair ships its full cap-slot row every
                    superstep — identity-filled when the pair is quiescent.
-                   wire = P · cap per local source row, unconditionally.
-        'compact'  frontier-compacted: each pair row is PACKED to a dense
-                   prefix of its active slots (source vertex in changed_v)
-                   plus a per-destination count vector; quiesced pairs ship
+                   wire = P · cap per local source row, unconditionally
+                   (PHYSICAL: that IS the routed buffer geometry).
+        'compact'  frontier-compacted protocol (Gopher Wire): each pair row
+                   is PACKED to a dense prefix of its active slots plus a
+                   per-destination count vector; quiesced pairs ship
                    count = 0. The receiver rebuilds fixed slot positions
                    with a pure gather, so the combine — and every
                    downstream bit — is IDENTICAL to the dense path.
-                   wire = Σ counts ∝ |frontier|.
+                   wire = Σ counts ∝ |frontier| — the MODELED count-prefixed
+                   payload; the physical buffers keep the dense geometry
+                   plus a slot map.
+        'tiered'   Gopher Mesh: the PHYSICAL buffers track the frontier. A
+                   static TierPlan (per-pair traffic profile, core.tiers)
+                   routes hot pairs' full cap rows through one all_to_all
+                   over per-device-pair row blocks, warm (cap/8) and cold
+                   (width-1) pairs' packed prefixes through a ppermute
+                   round-robin over only the nonzero device shifts, and
+                   ships NOTHING for structurally-empty pairs. wire = the
+                   routed geometry, static per plan. A pair whose active
+                   slots exceed its tier width is truncated and flagged
+                   (extras['over']); the run driver repairs that with a
+                   dense fallback retry and escalates the pair for the next
+                   version — results are bit-identical to 'dense'
+                   unconditionally.
 
-        ``wire`` models the count-prefixed PROTOCOL payload (what a real
-        transport would put on the network). In this XLA reproduction the
-        physical all_to_all buffers keep the dense P·cap geometry — static
-        shapes — and the compact mode additionally routes the slot-position
-        map, so on a real mesh its raw interconnect bytes are NOT smaller
-        today; making the buffer geometry track the frontier (ppermute
-        schedule / capacity tiers) is a named ROADMAP follow-on.
+        ``extras`` is the mode's per-pair telemetry: {} for dense,
+        {'pairs': (v, P) packed counts} for compact, plus {'over': (v, P)
+        overflow flags} for tiered. The BSP loop accumulates them into
+        Telemetry.pair_slots / pair_overflow — the observations
+        core.tiers.update_profile folds into the traffic profile.
         """
         prog = self.program
         cap = self.pg.mailbox_cap
@@ -189,7 +250,18 @@ class GopherEngine:
         combine = prog.combine
         num_parts = self.pg.num_parts
         Q = num_queries
-        compact = self.exchange == "compact"
+        mode = self.exchange
+
+        if mode == "tiered":
+            plan = self.tier_plan
+            assert plan is not None
+            assert plan.num_parts == num_parts and plan.cap == cap, \
+                "tier plan was built for a different graph geometry"
+            D = (1 if self.backend == "local"
+                 else int(self.mesh.shape[self.axis_name]))
+            sched = plan.schedule(D)
+            limits_np = plan.limits()
+            axis = self.axis_name if self.backend == "shard_map" else None
 
         def route(x):
             if self.backend == "local":
@@ -205,7 +277,8 @@ class GopherEngine:
             else:
                 comb = functools.partial(msg.combine_inbox_gather_batched,
                                          v_max=v_max, cap=cap, combine=combine)
-            if not compact:
+            extras = {}
+            if mode == "dense":
                 # gather-form dense mailbox: slots PULL through the inverse
                 # routing plan — no runtime scatter, only values travel
                 build = functools.partial(
@@ -215,7 +288,7 @@ class GopherEngine:
                 iv = route(jax.vmap(build)(vals, send, gb["ob_inv"]))
                 p_local = gb["vmask"].shape[0]
                 wire = jnp.int32(p_local * num_parts * cap)
-            else:
+            elif mode == "compact":
                 build = functools.partial(
                     msg.build_outbox_compact if Q is None
                     else msg.build_outbox_compact_batched,
@@ -233,9 +306,46 @@ class GopherEngine:
                     else msg.unpack_slots_batched, combine=combine)
                 iv = jax.vmap(unpack)(route(pvals), route(pinv))
                 wire = jnp.sum(counts).astype(jnp.int32)
+                extras = {"pairs": counts}
+            else:  # tiered
+                ident = msg.COMBINE_IDENTITY[combine]
+                build = functools.partial(
+                    msg.build_outbox_gather if Q is None
+                    else msg.build_outbox_gather_batched,
+                    num_parts=num_parts, cap=cap, combine=combine)
+                slot_vals = jax.vmap(build)(vals, send, gb["ob_inv"])
+                v_local = slot_vals.shape[0]
+                Qg = 1 if Q is None else Q
+                sv4 = slot_vals.reshape(v_local, num_parts, cap, Qg)
+                act = jax.vmap(functools.partial(
+                    msg.active_slots, num_parts=num_parts,
+                    cap=cap))(send, gb["ob_inv"])
+                lim = jnp.asarray(limits_np)
+                if axis is not None and D > 1:
+                    lim = jax.lax.dynamic_slice(
+                        lim, (jax.lax.axis_index(axis) * v_local, 0),
+                        (v_local, num_parts))
+                else:
+                    lim = lim[:v_local]
+                # fused pack (plan + tier truncation + spill detection) over
+                # the flat row batch — rows are independent, no vmap needed
+                R = v_local * num_parts
+                sv_rows = (sv4.reshape(R, cap) if Q is None
+                           else sv4.reshape(R, cap, Qg))
+                pvals, sids, _, counts, over = ops.outbox_pack(
+                    sv_rows, act.reshape(R, cap), lim.reshape(R), ident)
+                iv4 = msg.route_tiered(
+                    sv4, pvals.reshape(v_local, num_parts, cap, Qg),
+                    sids.reshape(v_local, num_parts, cap), sched, combine,
+                    axis_name=axis)
+                iv = iv4.reshape(v_local, num_parts,
+                                 cap if Q is None else cap * Qg)
+                wire = jnp.int32(sched.device_round_slots())
+                extras = {"pairs": counts.reshape(v_local, num_parts),
+                          "over": over.reshape(v_local, num_parts)}
             inbox = jax.vmap(comb)(iv, gb["ib_lo"], gb["ib_hub_idx"],
                                    gb["ib_hub"])
-            return inbox, nsent, wire
+            return inbox, nsent, wire, extras
 
         return exchange
 
@@ -254,7 +364,8 @@ class GopherEngine:
         state0 = jax.vmap(prog.init)(gb)
         # prime the mailbox with the INITIAL state's messages so superstep 0
         # computes against a consistent inbox (see make_exchange)
-        inbox0, nsent0, wire0 = self.make_exchange(gb, num_queries=Q)(state0)
+        inbox0, nsent0, wire0, ex0 = self.make_exchange(gb,
+                                                        num_queries=Q)(state0)
         if self.backend == "shard_map":
             s0 = jax.lax.psum(jnp.stack([nsent0, wire0]), self.axis_name)
             nsent0, wire0 = s0[0], s0[1]
@@ -262,6 +373,10 @@ class GopherEngine:
                      hist=jnp.zeros((self.max_supersteps,), jnp.int32),
                      whist=jnp.zeros((self.max_supersteps,), jnp.int32),
                      sent=nsent0, wire=wire0)
+        # per-pair wire telemetry (compact/tiered): rows stay device-local,
+        # the out_specs shard them back to the full (P, P) matrices
+        for k, v in ex0.items():
+            tele0[k] = v
         if Q is not None:
             tele0["qsteps"] = jnp.zeros((Q,), jnp.int32)
 
@@ -271,8 +386,8 @@ class GopherEngine:
 
         def body(c):
             state, inbox, step, _, tele = c
-            state, inbox, changed, liters, nsent, wire = sstep(state, inbox,
-                                                               step)
+            state, inbox, changed, liters, nsent, wire, ex = sstep(state,
+                                                                   inbox, step)
             # the halt vote rides the same reduction as the wire counters:
             # ONE fused psum per superstep carries [pairs-changed?, nsent,
             # wire(, per-query changed)] — the count vector the compact
@@ -300,6 +415,8 @@ class GopherEngine:
                             whist=tele["whist"].at[step].set(wire),
                             sent=tele["sent"] + nsent,
                             wire=tele["wire"] + wire)
+            for k, v in ex.items():
+                new_tele[k] = tele[k] + v
             if Q is not None:
                 new_tele["qsteps"] = jnp.where(changed_q > 0, step + 1,
                                                tele["qsteps"])
@@ -331,7 +448,7 @@ class GopherEngine:
             for k, v in extra.items():
                 gb[k] = jnp.asarray(v)
         state, steps, tele = self._runner(gb_example=gb)(gb)
-        return jax.tree.map(np.asarray, state), self._telemetry(steps, tele)
+        return self._finish(state, steps, tele, gb, num_queries=None)
 
     def run_queries(self, extra: Optional[dict] = None):
         """Run a query-batched program (``program.num_queries`` = Q) to global
@@ -352,15 +469,70 @@ class GopherEngine:
         for k, v in (extra or {}).items():
             gb[k] = jnp.asarray(v)
         state, steps, tele = self._runner(num_queries=Q, gb_example=gb)(gb)
-        return jax.tree.map(np.asarray, state), self._telemetry(steps, tele,
-                                                                num_queries=Q)
+        return self._finish(state, steps, tele, gb, num_queries=Q)
+
+    def _finish(self, state, steps, tele, gb, num_queries):
+        """Close out a run: on the tiered exchange, check the overflow
+        record — a pair whose active slots exceeded its tier width had
+        messages TRUNCATED, so the results cannot be trusted. The repair is
+        a DENSE FALLBACK RETRY (bit-identical by construction) plus a tier
+        escalation of the overflowed pairs, so the engine's next run — and,
+        through the profile, the next graph version's plan — has the width
+        this pair just demonstrated it needs."""
+        if self.exchange != "tiered" or "over" not in tele:
+            return (jax.tree.map(np.asarray, state),
+                    self._telemetry(steps, tele, num_queries=num_queries))
+        over = np.asarray(tele["over"])
+        spills = int(over.sum())
+        if spills == 0:
+            return (jax.tree.map(np.asarray, state),
+                    self._telemetry(steps, tele, num_queries=num_queries))
+        old = self.tier_plan
+        self.tier_plan = old.escalate(over > 0)
+        tiered_wire = int(tele["wire"])
+        tiered_rounds = int(steps) + 1
+        state2, steps2, tele2 = self._runner(num_queries=num_queries,
+                                             gb_example=gb,
+                                             exchange="dense")(gb)
+        t = self._telemetry(steps2, tele2, num_queries=num_queries,
+                            exchange="dense")
+        t.exchange = "tiered"
+        t.retried = True
+        t.spills = spills
+        t.escalations = self.tier_plan.escalations_from(old)
+        t.pair_overflow = over
+        # the profile observation comes from the ABORTED tiered attempt —
+        # pair_rounds records ITS round count so consumers normalize by the
+        # rounds the counts actually cover, not the dense retry's
+        t.pair_slots = np.asarray(tele["pairs"])
+        t.pair_rounds = tiered_rounds
+        # the failed tiered attempt's geometry still crossed the wire
+        t.wire_slots += tiered_wire
+        D = (1 if self.backend == "local"
+             else int(self.mesh.shape[self.axis_name]))
+        t.bytes_on_wire += (old.schedule(D).round_bytes(num_queries)
+                            * tiered_rounds)
+        return jax.tree.map(np.asarray, state2), t
 
     def _telemetry(self, steps, tele, num_queries: Optional[int] = None,
-                   rounds: Optional[int] = None) -> Telemetry:
+                   rounds: Optional[int] = None,
+                   exchange: Optional[str] = None) -> Telemetry:
         steps = int(steps)
+        exchange = exchange or self.exchange
         wire = int(tele["wire"]) if "wire" in tele else 0
         if rounds is None:
             rounds = steps + 1                   # supersteps + inbox prime
+        if exchange == "tiered":
+            D = (1 if self.backend == "local"
+                 else int(self.mesh.shape[self.axis_name]))
+            bytes_on_wire = (self.tier_plan.schedule(D)
+                             .round_bytes(num_queries) * rounds)
+        else:
+            bytes_on_wire = Telemetry.model_bytes(
+                wire, self.pg.num_parts, rounds=rounds,
+                cap=self.pg.mailbox_cap, num_queries=num_queries,
+                compact=exchange == "compact")
+        pair_over = (np.asarray(tele["over"]) if "over" in tele else None)
         return Telemetry(
             supersteps=steps,
             local_iters=np.asarray(tele["liters"]).reshape(-1),
@@ -371,13 +543,17 @@ class GopherEngine:
             wire_hist=(np.asarray(tele["whist"])[:steps]
                        if "whist" in tele else None),
             wire_slots=wire,
-            bytes_on_wire=Telemetry.model_bytes(
-                wire, self.pg.num_parts, rounds=rounds,
-                cap=self.pg.mailbox_cap, num_queries=num_queries,
-                compact=self.exchange == "compact"),
+            bytes_on_wire=bytes_on_wire,
+            exchange=exchange,
+            pair_slots=(np.asarray(tele["pairs"])
+                        if "pairs" in tele else None),
+            pair_rounds=rounds if "pairs" in tele else 0,
+            pair_overflow=pair_over,
+            spills=int(pair_over.sum()) if pair_over is not None else 0,
         )
 
-    def _runner(self, num_queries: Optional[int] = None, gb_example=None):
+    def _runner(self, num_queries: Optional[int] = None, gb_example=None,
+                exchange: Optional[str] = None):
         """The compiled BSP loop, cached so repeated runs hit the same jit
         entry instead of re-tracing.
 
@@ -390,10 +566,12 @@ class GopherEngine:
         apply_delta re-enters the compiled loop as long as the delta didn't
         change any padded shape, instead of paying a full XLA compile per
         graph version."""
+        exchange = exchange or self.exchange
+        tier_plan = self.tier_plan if exchange == "tiered" else None
         gb_sig = (tuple(sorted((k, v.shape, str(v.dtype))
                                for k, v in gb_example.items()))
                   if gb_example is not None else None)
-        key = (self.program, self.backend, self.exchange, num_queries,
+        key = (self.program, self.backend, exchange, tier_plan, num_queries,
                self.max_supersteps, self.axis_name, self.mesh,
                self.pg.num_parts, self.pg.v_max, self.pg.mailbox_cap, gb_sig)
         cached = _RUNNER_CACHE.get(key)
@@ -408,7 +586,8 @@ class GopherEngine:
                                  mailbox_cap=self.pg.mailbox_cap)
             slim.program = self.program
             slim.backend = self.backend
-            slim.exchange = self.exchange
+            slim.exchange = exchange
+            slim.tier_plan = tier_plan
             slim.mesh = self.mesh
             slim.axis_name = self.axis_name
             slim.max_supersteps = self.max_supersteps
@@ -432,6 +611,9 @@ class GopherEngine:
         resume, counters cover the current process's supersteps; the hist
         slots before the restored step are zero)."""
         assert self.backend == "local", "checkpointed runs use the local backend"
+        assert self.exchange != "tiered", \
+            "checkpointed runs use the dense/compact exchange (the tiered " \
+            "overflow retry doesn't span snapshot boundaries)"
         gb = self._graph_block()
         prog = self.program
         sstep = self.make_superstep(gb)
@@ -444,14 +626,15 @@ class GopherEngine:
 
             def body(c):
                 state, inbox, step, _, tele = c
-                state, inbox, changed, li, nsent, wire = sstep(state, inbox,
-                                                               step)
+                state, inbox, changed, li, nsent, wire, ex = sstep(state,
+                                                                   inbox, step)
                 nchanged = jnp.sum(changed.astype(jnp.int32))
                 tele = dict(liters=tele["liters"] + li,
                             hist=tele["hist"].at[step].set(nchanged),
                             whist=tele["whist"].at[step].set(wire),
                             sent=tele["sent"] + nsent,
-                            wire=tele["wire"] + wire)
+                            wire=tele["wire"] + wire,
+                            **{k: tele[k] + v for k, v in ex.items()})
                 return state, inbox, step + 1, ~jnp.any(changed), tele
 
             return jax.lax.while_loop(
@@ -468,7 +651,7 @@ class GopherEngine:
             step = jnp.int32(step)
         else:
             state = jax.vmap(prog.init)(gb)
-            inbox, nsent0, wire0 = jax.jit(self.make_exchange(gb))(state)
+            inbox, nsent0, wire0, ex0 = jax.jit(self.make_exchange(gb))(state)
             step = jnp.int32(0)
 
         primed = int(step) == 0
@@ -478,6 +661,9 @@ class GopherEngine:
                     whist=jnp.zeros((self.max_supersteps,), jnp.int32),
                     sent=(nsent0 if primed else jnp.int32(0)),
                     wire=(wire0 if primed else jnp.int32(0)))
+        if self.exchange == "compact":
+            tele["pairs"] = (ex0["pairs"] if primed else jnp.zeros(
+                (self.pg.num_parts, self.pg.num_parts), jnp.int32))
         done = False
         while not done and int(step) < self.max_supersteps:
             state, inbox, step, done_flag, tele = chunk(state, inbox, step, tele)
@@ -509,6 +695,12 @@ class GopherEngine:
                                   jax.eval_shape(lambda g: jax.vmap(self.program.init)(g),
                                                  gb_shapes))
         tele_spec = dict(liters=spec, hist=rep, whist=rep, sent=rep, wire=rep)
+        # per-pair wire telemetry shards over parts like liters: each
+        # device owns its local source rows of the (P, P) matrices
+        if self.exchange in ("compact", "tiered"):
+            tele_spec["pairs"] = spec
+        if self.exchange == "tiered":
+            tele_spec["over"] = spec
         if num_queries is not None:
             tele_spec["qsteps"] = rep
         out_specs = (state_spec, rep, tele_spec)
@@ -535,7 +727,7 @@ class GopherEngine:
 
         def one_step(gb, state, inbox, step):
             sstep = self.make_superstep(gb)
-            st, ib, ch, li, ns, wire = sstep(state, inbox, step)
+            st, ib, ch, li, ns, wire, ex = sstep(state, inbox, step)
             return st, ib, ch
 
         f = compat.shard_map(one_step, mesh=self.mesh,

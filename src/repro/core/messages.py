@@ -182,6 +182,18 @@ def combine_inbox_gather_batched(in_vals: jnp.ndarray, ib_lo: jnp.ndarray,
 # halt, results — is identical to the dense path.
 
 
+def active_slots(send_mask: jnp.ndarray, ob_inv: jnp.ndarray,
+                 num_parts: int, cap: int) -> jnp.ndarray:
+    """(num_parts, cap) bool: mailbox slots of ONE source partition whose
+    source vertex is in the send set this superstep. Q-batched send masks
+    ((r_max, Q)) activate a slot when ANY lane sends — the contiguous
+    Q-vector ships (or doesn't) as one unit."""
+    valid = ob_inv != PAD
+    safe = jnp.where(valid, ob_inv, 0)
+    sm = send_mask if send_mask.ndim == 1 else jnp.any(send_mask, axis=-1)
+    return (valid & sm[safe]).reshape(num_parts, cap)
+
+
 def build_outbox_compact(vals: jnp.ndarray, send_mask: jnp.ndarray,
                          ob_inv: jnp.ndarray, num_parts: int, cap: int,
                          combine: str, backend=None):
@@ -189,30 +201,29 @@ def build_outbox_compact(vals: jnp.ndarray, send_mask: jnp.ndarray,
     (pvals (num_parts, cap), pinv (num_parts, cap) int32,
     counts (num_parts,) int32): per destination row, the packed prefix of
     active slot values, the slot->prefix-position map, and the prefix
-    length (the wire header — Σ counts is this partition's payload)."""
+    length (the wire header — Σ counts is this partition's payload).
+
+    Since Gopher Mesh the compaction plan is FUSED into the pack
+    (kernels.ops.outbox_pack): packed positions fall out of the activity
+    mask's prefix sum, so no argsort/one-hot plan pass runs."""
     from repro.kernels import ops
     ident = COMBINE_IDENTITY[combine]
     # the dense gather-form outbox IS the slot-value oracle; compaction only
-    # adds the activity mask + the pack permutation on top of it
+    # adds the activity mask + the fused pack on top of it
     slot_vals = build_outbox_gather(vals, send_mask, ob_inv, num_parts, cap,
                                     combine)
-    valid = ob_inv != PAD
-    active = (valid & send_mask[jnp.where(valid, ob_inv, 0)]
-              ).reshape(num_parts, cap)
-    pfwd, pinv, counts = ops.outbox_compact_plan(active, backend=backend)
-    has = pfwd != PAD
-    pvals = jnp.where(has, jnp.take_along_axis(
-        slot_vals, jnp.where(has, pfwd, 0), axis=1), ident)
+    active = active_slots(send_mask, ob_inv, num_parts, cap)
+    full = jnp.full((num_parts,), cap, jnp.int32)
+    pvals, _, pinv, counts, _ = ops.outbox_pack(slot_vals, active, full,
+                                                ident, backend=backend)
     return pvals, pinv, counts
 
 
 def build_outbox_compact_batched(vals: jnp.ndarray, send_mask: jnp.ndarray,
                                  ob_inv: jnp.ndarray, num_parts: int,
                                  cap: int, combine: str, backend=None):
-    """Q-query compacted outbox, QUERY-TRAILING: vals/send are (r_max, Q). A
-    slot is active when ANY query lane of its source vertex is in the send
-    set, so the whole contiguous Q-vector ships (or doesn't) as one unit —
-    the count header stays per-slot, not per-lane. Returns
+    """Q-query compacted outbox, QUERY-TRAILING: vals/send are (r_max, Q);
+    plan fused into the pack as in build_outbox_compact. Returns
     (pvals (num_parts, cap*Q), pinv (num_parts, cap), counts (num_parts,))."""
     from repro.kernels import ops
     ident = COMBINE_IDENTITY[combine]
@@ -220,16 +231,11 @@ def build_outbox_compact_batched(vals: jnp.ndarray, send_mask: jnp.ndarray,
     slot_vals = build_outbox_gather_batched(
         vals, send_mask, ob_inv, num_parts, cap,
         combine).reshape(num_parts, cap, Q)
-    valid = ob_inv != PAD
-    safe = jnp.where(valid, ob_inv, 0)
-    active = (valid & jnp.any(send_mask, axis=-1)[safe]
-              ).reshape(num_parts, cap)
-    pfwd, pinv, counts = ops.outbox_compact_plan(active, backend=backend)
-    has = pfwd != PAD
-    pv = jnp.take_along_axis(slot_vals, jnp.where(has, pfwd, 0)[..., None],
-                             axis=1)
-    pvals = jnp.where(has[..., None], pv, ident).reshape(num_parts, cap * Q)
-    return pvals, pinv, counts
+    active = active_slots(send_mask, ob_inv, num_parts, cap)
+    full = jnp.full((num_parts,), cap, jnp.int32)
+    pvals, _, pinv, counts, _ = ops.outbox_pack(slot_vals, active, full,
+                                                ident, backend=backend)
+    return pvals.reshape(num_parts, cap * Q), pinv, counts
 
 
 def unpack_slots(pvals: jnp.ndarray, pinv: jnp.ndarray,
@@ -276,3 +282,79 @@ def route_shard_map(outbox_vals: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     x = jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
     # now x[d_src, v_src, v_dst, cap] on each destination device
     return x.reshape(D, v, v, cap).transpose(2, 0, 1, 3).reshape(v, D * v, cap)
+
+
+# ---------------- capacity-tiered physical exchange (Gopher Mesh) -----------
+# The compact exchange above shrinks the modeled PROTOCOL payload but its
+# physical buffers keep the dense (P, cap) geometry (static shapes). The
+# tiered router below makes the buffers XLA actually routes track the
+# frontier: hot pairs ship their full dense cap row through one all_to_all
+# over per-device-pair row blocks, warm/cold pairs ship a packed tier-width
+# prefix (values + int32 slot ids) through a ppermute round-robin over only
+# the nonzero device shifts, and structurally-empty pairs ship NOTHING.
+# Every table is a trace-time constant (core.tiers.TierSchedule), so the
+# routed shapes — the physical wire — are fixed per tier plan. The receiver
+# rebuilds the exact dense slot array (each occupied slot is written once
+# with its exact value, everything else holds the ⊕-identity), so as long
+# as no pair overflowed its tier width every downstream bit is identical to
+# the dense exchange; overflow is detected upstream (ops.outbox_pack) and
+# repaired by the engine's dense fallback retry.
+
+
+def route_tiered(dense_vals: jnp.ndarray, pvals: jnp.ndarray,
+                 sids: jnp.ndarray, sched, combine: str,
+                 axis_name=None) -> jnp.ndarray:
+    """Physically route one superstep's outboxes along the tier schedule.
+
+    dense_vals (v, P, cap, Qg)  gather-form dense slot values (hot rows
+                                ship these as-is — no slot ids travel)
+    pvals      (v, P, cap, Qg)  packed prefixes (warm/cold rows ship the
+                                first tier-width columns)
+    sids       (v, P, cap)      packed position -> slot id maps
+    sched                       core.tiers.TierSchedule built for this mesh
+    axis_name                   mesh axis ('shard_map' backend) or None
+                                ('local' backend — D == 1, no collectives)
+
+    Returns the received dense slot array (v, P, cap, Qg), bit-identical to
+    what route_local/route_shard_map would have delivered when no pair
+    overflowed its tier budget.
+    """
+    ident = COMBINE_IDENTITY[combine]
+    v, P, cap, Qg = dense_vals.shape
+    D = sched.D
+    me = jax.lax.axis_index(axis_name) if (axis_name and D > 1) else 0
+    dflat = dense_vals.reshape(v * P, cap, Qg)
+    pflat = pvals.reshape(v * P, cap, Qg)
+    iflat = sids.reshape(v * P, cap)
+    out = jnp.full((v * P, cap, Qg), ident, dense_vals.dtype)
+
+    # hot tier: one all_to_all over (D, h, cap) row blocks
+    if sched.hot_h:
+        st = jnp.asarray(sched.hot_send)[me]            # (D, h)
+        buf = dflat[jnp.where(st == PAD, 0, st)]        # (D, h, cap, Qg)
+        if axis_name is not None and D > 1:
+            buf = jax.lax.all_to_all(buf, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=True)
+        rt = jnp.asarray(sched.hot_recv)[me]            # (D, h)
+        tgt = jnp.where(rt == PAD, v * P, rt).reshape(-1)
+        out = out.at[tgt].set(buf.reshape(-1, cap, Qg), mode="drop")
+
+    # warm/cold tiers: ppermute round-robin over the nonzero device shifts
+    flat = out.reshape(v * P * cap, Qg)
+    for width, shifts in ((sched.warm_cap, sched.warm_shifts),
+                          (1, sched.cold_shifts)):
+        for k, g, send_tab, recv_tab in shifts:
+            st = jnp.asarray(send_tab)[me]              # (g,)
+            rows = jnp.where(st == PAD, 0, st)
+            bv = pflat[rows][:, :width]                 # (g, width, Qg)
+            bi = iflat[rows][:, :width]                 # (g, width)
+            if axis_name is not None and k % D != 0:
+                perm = [(i, (i + k) % D) for i in range(D)]
+                bv = jax.lax.ppermute(bv, axis_name, perm)
+                bi = jax.lax.ppermute(bi, axis_name, perm)
+            rt = jnp.asarray(recv_tab)[me]              # (g,)
+            ok = (rt != PAD)[:, None] & (bi != PAD)
+            pos = jnp.where(ok, rt[:, None] * cap + bi, v * P * cap)
+            flat = flat.at[pos.reshape(-1)].set(bv.reshape(-1, Qg),
+                                                mode="drop")
+    return flat.reshape(v, P, cap, Qg)

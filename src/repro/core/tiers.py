@@ -1,0 +1,328 @@
+"""Gopher Mesh: capacity-tiered physical exchange planning.
+
+PR 3's compact exchange made the *modeled* protocol payload track the
+frontier, but the physical ``all_to_all`` still routed the dense
+``P² · cap · Q`` buffer (plus a slot map) every superstep — on real
+hardware the interconnect moved MORE bytes than the dense path. This module
+plans the buffers XLA actually routes so their geometry tracks the
+frontier:
+
+  * every partition pair carries a per-pair **traffic profile** — an EWMA of
+    the packed slot counts the compact/tiered exchange already computes
+    (``wire_ewma`` on the host graph block, seeded with the structural slot
+    occupancy, updated by :func:`update_profile` after each run and patched
+    through ``gofs.temporal.apply_delta`` so a delta's dirty frontier is
+    pre-announced as expected traffic);
+  * :meth:`TierPlan.build` classifies pairs into static capacity **tiers**
+    — hot pairs keep the full ``cap``-slot row, warm pairs ship a packed
+    ``cap/8``-slot prefix, cold pairs ship a single width-1 slot, and pairs
+    with zero structural occupancy ship **nothing** (true pairwise skip);
+  * :meth:`TierPlan.schedule` lays the tiers out on a concrete device mesh:
+    the hot tier rides one ``all_to_all`` over per-device-pair row blocks,
+    the warm/cold tiers ride a ``ppermute`` round-robin over only the
+    nonzero device shifts. Every table is a static constant, so the routed
+    buffer shapes — and therefore the physical wire — are known at compile
+    time (:meth:`TierSchedule.round_slots`).
+
+Correctness is never bet on the profile: the pack kernel reports per-pair
+**overflow** (a pair whose active slot count exceeded its tier width had
+messages truncated), the engine retries the run on the dense exchange —
+results stay bit-identical to ``exchange='dense'`` unconditionally — and
+:meth:`TierPlan.escalate` promotes the overflowed pairs one tier for the
+next version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.gofs.formats import PAD
+
+# tier codes, ordered so escalation is "+1 and clamp"
+EXCLUDED = 0    # zero structural occupancy: the pair can never carry a slot
+COLD = 1        # width-1 row: historically silent pair, count-only headroom
+WARM = 2        # packed cap/8 prefix
+HOT = 3         # the full cap-slot row (the dense geometry, per pair)
+
+TIER_NAMES = {EXCLUDED: "excluded", COLD: "cold", WARM: "warm", HOT: "hot"}
+
+# classification thresholds (see TierPlan.build)
+COLD_THRESH = 0.5   # expected slots/round at or below this -> cold
+PROFILE_DECAY = 0.25  # update_profile: weight kept on the OLD ewma
+
+
+def occupancy_from_ob_inv(ob_inv: np.ndarray) -> np.ndarray:
+    """(P, P*cap) outbox slot map -> (P, P) live-slot count per pair: the
+    structural ceiling on any superstep's packed count."""
+    P = ob_inv.shape[0]
+    cap = ob_inv.shape[1] // P
+    return (ob_inv.reshape(P, P, cap) != PAD).sum(-1).astype(np.int64)
+
+
+def occupancy_from_graph(pg) -> np.ndarray:
+    """(P, P) live remote-edge count per pair straight from the GoFS fields
+    (no block needed)."""
+    P = pg.num_parts
+    occ = np.zeros((P, P), np.int64)
+    live = pg.re_src != PAD
+    sp, e = np.nonzero(live)
+    np.add.at(occ, (sp, pg.re_dst_part[sp, e]), 1)
+    return occ
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPlan:
+    """Static per-pair tier assignment. Hashable — the engine's compiled-loop
+    cache keys on it, so two engines with the same plan share one compile."""
+    num_parts: int
+    cap: int
+    warm_cap: int
+    tier_bytes: bytes            # (P*P,) int8 row-major tier codes
+
+    @property
+    def tiers(self) -> np.ndarray:
+        P = self.num_parts
+        return np.frombuffer(self.tier_bytes, np.int8).reshape(P, P)
+
+    def limits(self) -> np.ndarray:
+        """(P, P) int32 slot budget per pair: the tier width the pack stage
+        truncates to (and the overflow detector compares counts against)."""
+        w = np.array([0, 1, self.warm_cap, self.cap], np.int32)
+        return w[self.tiers]
+
+    def counts(self) -> dict:
+        t = self.tiers
+        return {name: int((t == code).sum()) for code, name in TIER_NAMES.items()}
+
+    # ---------------- construction ----------------
+    @staticmethod
+    def build(expected: np.ndarray, occupancy: np.ndarray, cap: int,
+              warm_div: int = 8) -> "TierPlan":
+        """Classify pairs from ``expected`` (EWMA slots/round, (P, P) float)
+        clamped by ``occupancy`` (structural live slots, (P, P) int):
+
+          occupancy == 0      -> EXCLUDED  (nothing can ever ship)
+          occupancy == 1      -> COLD      (width 1 covers the worst case)
+          ew >  warm_cap      -> HOT       (full cap row)
+          ew <= COLD_THRESH   -> COLD      (width 1)
+          otherwise           -> WARM      (cap / warm_div prefix)
+
+        where ``ew = min(expected, occupancy)``. With ``expected ==
+        occupancy`` (the structural prior a cold-built block carries) no
+        pair's width can be below its maximum possible count, so the plan
+        provably never overflows; a learned profile trades that guarantee
+        for geometry, backstopped by the dense fallback retry."""
+        P = occupancy.shape[0]
+        warm_cap = min(max(1, -(-cap // warm_div)), cap)
+        ew = np.minimum(np.asarray(expected, np.float64), occupancy)
+        t = np.full((P, P), WARM, np.int8)
+        t[ew <= COLD_THRESH] = COLD
+        t[ew > warm_cap] = HOT
+        t[occupancy <= 1] = COLD
+        t[occupancy <= 0] = EXCLUDED
+        return TierPlan(num_parts=P, cap=int(cap), warm_cap=int(warm_cap),
+                        tier_bytes=t.tobytes())
+
+    @staticmethod
+    def from_block(host_gb: dict, warm_div: int = 8) -> "TierPlan":
+        """Plan from a host graph block: structural occupancy from its
+        outbox slot map, expected traffic from its ``wire_ewma`` profile."""
+        occ = occupancy_from_ob_inv(host_gb["ob_inv"])
+        ew = host_gb.get("wire_ewma")
+        if ew is None:
+            ew = occ
+        cap = host_gb["ob_inv"].shape[1] // host_gb["ob_inv"].shape[0]
+        return TierPlan.build(ew, occ, cap, warm_div=warm_div)
+
+    @staticmethod
+    def from_graph(pg, warm_div: int = 8) -> "TierPlan":
+        """Structural plan (no history): expected = occupancy, so every
+        pair's width covers its worst case — never overflows. The engine's
+        default when ``exchange='tiered'`` is requested without a plan."""
+        occ = occupancy_from_graph(pg)
+        return TierPlan.build(occ, occ, pg.mailbox_cap, warm_div=warm_div)
+
+    # ---------------- escalation ----------------
+    def escalate(self, pair_mask: np.ndarray) -> "TierPlan":
+        """Promote overflowed pairs one tier (COLD->WARM->HOT); a pair that
+        overflowed while EXCLUDED signals a plan/block mismatch and jumps
+        straight to HOT. Returns a new plan (self is frozen)."""
+        t = self.tiers.copy()
+        m = np.asarray(pair_mask, bool)
+        t[m & (t == EXCLUDED)] = HOT
+        t[m & (t > EXCLUDED)] = np.minimum(t[m & (t > EXCLUDED)] + 1, HOT)
+        return dataclasses.replace(self, tier_bytes=t.tobytes())
+
+    def escalations_from(self, old: "TierPlan") -> int:
+        return int((self.tiers > old.tiers).sum())
+
+    # ---------------- physical schedule ----------------
+    def schedule(self, num_devices: int = 1) -> "TierSchedule":
+        return TierSchedule(self, num_devices)
+
+
+class TierSchedule:
+    """The tier plan laid out on a concrete mesh of ``D`` devices (``v =
+    P / D`` partitions each). All tables are numpy constants consumed at
+    trace time; the leading axis is the device id, selected per shard with
+    ``lax.axis_index`` (SPMD-uniform program, per-device constants).
+
+      hot_send (D, D, h)  sender i, destination-device block j, row r ->
+                          flat local outbox row ``(s % v) * P + d`` (PAD pads)
+      hot_recv (D, D, h)  receiver j, source-device block i, row r ->
+                          flat local inbox pair ``(d % v) * P + s``
+      warm/cold shifts    [(k, g, send (D, g), recv (D, g)), ...] — shift k
+                          ships rows whose destination device is ``(i + k) %
+                          D`` via one ppermute; shifts with zero pairs on
+                          every device are skipped entirely (the round-robin
+                          covers only the nonzero device pairs).
+    """
+
+    def __init__(self, plan: TierPlan, num_devices: int):
+        P, D = plan.num_parts, num_devices
+        assert P % D == 0, "partitions must tile the device mesh"
+        v = P // D
+        self.plan = plan
+        self.D, self.v, self.P = D, v, P
+        self.cap, self.warm_cap = plan.cap, plan.warm_cap
+        tiers = plan.tiers
+
+        # hot tier: per-device-pair row blocks for one all_to_all
+        hs, hd = np.nonzero(tiers == HOT)
+        di, dj = hs // v, hd // v
+        m = np.zeros((D, D), np.int64)
+        np.add.at(m, (di, dj), 1)
+        self.hot_h = h = int(m.max()) if m.size else 0
+        self.hot_send = np.full((D, D, max(h, 1)), PAD, np.int32)
+        self.hot_recv = np.full((D, D, max(h, 1)), PAD, np.int32)
+        fill = np.zeros((D, D), np.int64)
+        for s, d in zip(hs, hd):
+            i, j = s // v, d // v
+            r = fill[i, j]
+            fill[i, j] = r + 1
+            self.hot_send[i, j, r] = (s % v) * P + d
+            self.hot_recv[j, i, r] = (d % v) * P + s
+
+        # warm/cold tiers: ppermute round-robin over device shifts
+        def shifts_for(code):
+            ss, dd = np.nonzero(tiers == code)
+            out = []
+            for k in range(D):
+                sel = (dd // v) == ((ss // v) + k) % D
+                if not sel.any():
+                    continue
+                cnt = np.zeros(D, np.int64)
+                np.add.at(cnt, ss[sel] // v, 1)
+                g = int(cnt.max())
+                send = np.full((D, g), PAD, np.int32)
+                recv = np.full((D, g), PAD, np.int32)
+                fill = np.zeros(D, np.int64)
+                for s, d in zip(ss[sel], dd[sel]):
+                    i = s // v
+                    j = (i + k) % D
+                    r = fill[i]
+                    fill[i] = r + 1
+                    send[i, r] = (s % v) * P + d
+                    recv[j, r] = (d % v) * P + s
+                out.append((k, g, send, recv))
+            return tuple(out)
+
+        self.warm_shifts = shifts_for(WARM)
+        self.cold_shifts = shifts_for(COLD)
+
+    # ---------------- static wire accounting ----------------
+    def round_slots(self) -> int:
+        """Value slots (Q-groups) physically routed per exchange round —
+        the buffer geometry, data-independent. Dense ships P²·cap."""
+        hot = self.D * self.D * self.hot_h * self.cap
+        warm = sum(self.D * g * self.warm_cap for _, g, _, _ in self.warm_shifts)
+        cold = sum(self.D * g for _, g, _, _ in self.cold_shifts)
+        return hot + warm + cold
+
+    def round_index_slots(self) -> int:
+        """int32 slot-id lanes riding beside the warm/cold value slots (hot
+        rows are dense — no ids travel)."""
+        warm = sum(self.D * g * self.warm_cap for _, g, _, _ in self.warm_shifts)
+        cold = sum(self.D * g for _, g, _, _ in self.cold_shifts)
+        return warm + cold
+
+    def round_bytes(self, num_queries: Optional[int]) -> int:
+        q = num_queries or 1
+        return self.round_slots() * 4 * q + self.round_index_slots() * 4
+
+    def device_round_slots(self) -> int:
+        """Per-device share of round_slots (what one shard reports before
+        the cross-device psum)."""
+        return self.round_slots() // self.D
+
+
+def announce_frontier(host_gb: dict, pg, dirty: np.ndarray) -> None:
+    """Pre-announce a delta's dirty frontier into the block's ``wire_ewma``
+    (in place), two layers deep:
+
+      1. pairs whose SOURCE VERTEX is dirty rise to their exact live-slot
+         count — precisely what the next incremental run's inbox-prime
+         round ships;
+      2. every pair of a partition in the META-GRAPH CLOSURE of the dirty
+         set rises to a WARM floor (``min(occupancy, COLD_THRESH·2 + 1)``):
+         an incremental superstep's senders can only be partitions the
+         dirty seeds reach through meta-edges, so this keeps every pair
+         that CAN fire during the restart out of the width-1 cold tier —
+         without touching unreachable pairs, and only until quiet runs
+         decay the profile back down.
+
+    ``max``, not ``+=`` — idempotent across event replays on block
+    replicas. Called by gofs.temporal.apply_delta on the zero-repack block
+    path; the overflow/escalation retry backstops whatever this floor still
+    underestimates."""
+    ew = host_gb.get("wire_ewma")
+    if ew is None:
+        return
+    P = pg.num_parts
+    expect = np.zeros((P, P), np.float64)
+    live = pg.re_src != PAD
+    sp, e = np.nonzero(live)
+    src_dirty = np.asarray(dirty, bool)[sp, pg.re_src[sp, e]]
+    np.add.at(expect, (sp[src_dirty], pg.re_dst_part[sp[src_dirty],
+                                                     e[src_dirty]]), 1)
+    # meta-closure warm floor
+    occ = occupancy_from_graph(pg)
+    reach = np.asarray(dirty, bool).any(1)
+    adj = occ > 0
+    while True:
+        grown = reach | adj[reach].any(0)
+        if (grown == reach).all():
+            break
+        reach = grown
+    floor = np.where(reach[:, None], np.minimum(occ, 2 * COLD_THRESH + 1),
+                     0.0)
+    host_gb["wire_ewma"] = np.maximum(
+        np.asarray(ew, np.float64), np.maximum(expect, floor)
+        ).astype(np.float32)
+
+
+def update_profile(host_gb: dict, pair_slots: np.ndarray, rounds: int,
+                   decay: float = PROFILE_DECAY) -> np.ndarray:
+    """Fold one run's observed per-pair packed counts into the block's
+    ``wire_ewma`` profile (in place):
+
+        ewma' = decay * ewma + (1 - decay) * pair_slots / rounds
+
+    ``pair_slots`` is ``Telemetry.pair_slots`` — the (P, P) sum of packed
+    counts over the run's exchange rounds (compact and tiered modes record
+    it; the tiered counts are pre-truncation, so an overflowing pair's true
+    demand raises its profile even while its messages were clipped). After
+    a dense fallback retry, normalize by ``Telemetry.pair_rounds`` — the
+    aborted tiered attempt's round count, which the counts actually cover —
+    not ``supersteps + 1``. A block with no profile (not built by
+    host_graph_block) is left untouched."""
+    ew = host_gb.get("wire_ewma")
+    if ew is None:
+        return None
+    obs = np.asarray(pair_slots, np.float64) / max(int(rounds), 1)
+    out = (decay * np.asarray(ew, np.float64)
+           + (1.0 - decay) * obs).astype(np.float32)
+    host_gb["wire_ewma"] = out
+    return out

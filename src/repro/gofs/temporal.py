@@ -165,7 +165,11 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
     zero-repack versioned-block path. The mailbox cap then becomes STICKY
     (grows lane-padded on overflow, never shrinks) so the patched block's
     flat slot positions — and the compiled BSP loop keyed on its shapes —
-    survive the version bump.
+    survive the version bump. The block's Gopher Mesh traffic profile
+    (``wire_ewma``) is carried across the version and raised to the dirty
+    frontier's expected per-pair slot counts (core.tiers.announce_frontier),
+    so tier plans rebuilt from the patched block give freshly woken pairs
+    enough width.
     """
     n = pg.n_global
     P, v_max = pg.num_parts, pg.v_max
@@ -314,8 +318,14 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
     new_block = None
     if block is not None:
         from repro.core.blocks import patch_host_block
+        from repro.core.tiers import announce_frontier
         new_block = patch_host_block(block, new_pg, touched_rows,
                                      ev_rdel, ev_radd, lane_pad=lane_pad)
+        # Gopher Mesh: patch the per-pair traffic profile through the
+        # version bump — the dirty frontier IS the next run's prime-round
+        # traffic, so the pairs this delta just woke are raised to at least
+        # their expected slot counts before any tier plan is rebuilt
+        announce_frontier(new_block, new_pg, dirty_ins | dirty_rem)
     return DeltaResult(pg=new_pg, dirty_insert=dirty_ins,
                        dirty_remove=dirty_rem, stats=stats, block=new_block,
                        events=(touched_rows, ev_rdel, ev_radd))

@@ -20,9 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.gofs.formats import PAD
-from repro.kernels.outbox_compact import outbox_compact_plan_pallas
+from repro.kernels.outbox_compact import (outbox_compact_plan_pallas,
+                                          outbox_pack_pallas)
 from repro.kernels.ref import (SEMIRINGS, outbox_compact_plan_ref,
-                               semiring_spmv_frontier_ref,
+                               outbox_pack_ref, semiring_spmv_frontier_ref,
                                semiring_spmv_ref)
 from repro.kernels.semiring_spmv import (semiring_spmv_frontier_pallas,
                                          semiring_spmv_pallas)
@@ -74,6 +75,43 @@ def outbox_compact_plan(active: jnp.ndarray, backend: Optional[str] = None,
         return outbox_compact_plan_pallas(
             active, block_r=block_r,
             interpret=jax.default_backend() != "tpu")
+    raise ValueError(f"unknown backend {backend}")
+
+
+def outbox_pack(slot_vals: jnp.ndarray, active: jnp.ndarray,
+                limit: jnp.ndarray, ident: float,
+                backend: Optional[str] = None, block_r: int = 8):
+    """Fused compaction plan + value pack + spill detection (Gopher Mesh):
+    (R, cap[, Q]) slot values + (R, cap) active mask + (R,) tier budget ->
+    (pvals, sids, pinv, counts, over). See kernels.ref.outbox_pack_ref for
+    the contract. This replaces PR 3's separate argsort/one-hot plan pass:
+    the jnp path is one cumsum + one masked scatter, the Pallas path is the
+    single fused spill kernel (kernels.outbox_compact.outbox_pack_pallas).
+
+    Q-batched values keep the fused kernel for the plan half (the plan is
+    query-independent) and pack the contiguous Q-vectors with the same
+    masked scatter the jnp path uses — the per-lane value DMA dominates
+    there, not the plan.
+    """
+    backend = backend or _default_backend()
+    if backend == "jnp":
+        return outbox_pack_ref(slot_vals, active, limit, ident)
+    if backend == "pallas":
+        interp = jax.default_backend() != "tpu"
+        if slot_vals.ndim == 2:
+            return outbox_pack_pallas(slot_vals, active, limit, ident,
+                                      block_r=block_r, interpret=interp)
+        # Q-batched: plan (+ per-row truncation/overflow) from the fused
+        # kernel, Q-vector pack as a masked scatter through pinv
+        _, sids, pinv, counts, over = outbox_pack_pallas(
+            jnp.zeros(active.shape, jnp.float32), active, limit, ident,
+            block_r=block_r, interpret=interp)
+        r, cap = active.shape
+        rows = jnp.arange(r, dtype=jnp.int32)[:, None]
+        dest = jnp.where(pinv != PAD, pinv, cap)
+        pvals = jnp.full(slot_vals.shape, ident, slot_vals.dtype
+                         ).at[rows, dest].set(slot_vals, mode="drop")
+        return pvals, sids, pinv, counts, over
     raise ValueError(f"unknown backend {backend}")
 
 

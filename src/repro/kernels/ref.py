@@ -67,6 +67,49 @@ def outbox_compact_plan_ref(active: jnp.ndarray):
     return pfwd, pinv, counts
 
 
+def outbox_pack_ref(slot_vals: jnp.ndarray, active: jnp.ndarray,
+                    limit: jnp.ndarray, ident: float):
+    """Fused compaction plan + value pack (Gopher Mesh). One pass replaces
+    PR 3's argsort plan + take_along_axis gather: the packed position of an
+    active slot is just its mask prefix-sum minus one, so the pack is a
+    single masked scatter — no sort runs at all.
+
+    slot_vals: (R, cap) or (R, cap, Q) dense slot values (the gather-form
+    outbox); active: (R, cap) bool; limit: (R,) int32 per-row slot budget
+    (the pair's tier width — positions at or past it are TRUNCATED, which
+    the tiered exchange detects via ``over`` and repairs with the dense
+    fallback retry). Returns
+
+      pvals  like slot_vals   packed prefix, ident-filled past min(count,
+                              limit)
+      sids   (R, cap) int32   packed position -> slot id (PAD past the
+                              prefix) — the receiver's scatter addresses
+      pinv   (R, cap) int32   slot id -> packed position (PAD if inactive
+                              or truncated) — the compact exchange's
+                              receiver gather map
+      counts (R,)   int32     UNtruncated active count (the profile /
+                              overflow signal)
+      over   (R,)   int32     1 where counts > limit (messages were dropped)
+    """
+    R, cap = active.shape
+    act = active.astype(jnp.int32)
+    csum = jnp.cumsum(act, axis=-1)
+    counts = csum[:, -1]
+    pos = csum - 1
+    keep = active & (pos < limit[:, None])
+    dest = jnp.where(keep, pos, cap)                  # cap -> dropped
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+    slot = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32)[None, :],
+                            (R, cap))
+    sids = jnp.full((R, cap), PAD, jnp.int32).at[rows, dest].set(
+        slot, mode="drop")
+    pinv = jnp.where(keep, pos, PAD).astype(jnp.int32)
+    pv = jnp.full(slot_vals.shape, ident, slot_vals.dtype)
+    pvals = pv.at[rows, dest].set(slot_vals, mode="drop")
+    over = (counts > limit).astype(jnp.int32)
+    return pvals, sids, pinv, counts, over
+
+
 def semiring_spmv_frontier_ref(x: jnp.ndarray, frontier: jnp.ndarray,
                                nbr: jnp.ndarray, wgt: jnp.ndarray,
                                semiring: str):

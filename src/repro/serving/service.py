@@ -27,7 +27,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import GopherEngine, device_block, host_graph_block
+from repro.core import (GopherEngine, TierPlan, device_block,
+                        host_graph_block, update_profile)
 from repro.gofs.formats import PartitionedGraph
 from repro.serving import planner as pl
 from repro.serving.batched import (BatchedPersonalizedPageRank,
@@ -103,6 +104,7 @@ class GraphQueryService:
         self.landmark_caches: Dict[str, LandmarkCache] = {}
         self._gb: Dict[str, dict] = {}       # device graph blocks
         self._host_gb: Dict[str, dict] = {}  # patchable host twins (temporal)
+        self._tier_plans: Dict[str, TierPlan] = {}  # Gopher Mesh plans
         self._engines: Dict[tuple, GopherEngine] = {}
         self._pending: List[Request] = []
         self._next_ticket = 0
@@ -129,6 +131,7 @@ class GraphQueryService:
         self.cache.invalidate(lambda k: k[0][0] == name)
         self._gb.pop(name, None)
         self._host_gb.pop(name, None)
+        self._tier_plans.pop(name, None)
         self._engines = {k: e for k, e in self._engines.items()
                          if k[0] != name}
         self.landmark_caches.pop(name, None)
@@ -253,6 +256,18 @@ class GraphQueryService:
         self.stats.batches += 1
         self.stats.engine_supersteps += tele.supersteps
         self.stats.lane_fill.append(batch.fill)
+        # Gopher Mesh feedback: fold this batch's per-pair wire observation
+        # into the graph's traffic profile (the next plan rebuild tightens
+        # the tiers), and propagate any overflow escalation the engine
+        # applied so freshly pooled engines start from the promoted plan
+        if tele.pair_slots is not None and batch.graph in self._host_gb:
+            update_profile(self._host_gb[batch.graph], tele.pair_slots,
+                           tele.pair_rounds)
+        if tele.escalations:
+            self._tier_plans[batch.graph] = eng.tier_plan
+            for key, other in self._engines.items():
+                if key[0] == batch.graph and other.exchange == "tiered":
+                    other.tier_plan = eng.tier_plan
         return results[:len(batch.queries)], tele.query_supersteps
 
     def _graph_block(self, graph: str) -> dict:
@@ -264,6 +279,21 @@ class GraphQueryService:
                                               # the next apply_delta
             self._gb[graph] = device_block(host)
         return self._gb[graph]
+
+    def _tier_plan(self, graph: str) -> Optional[TierPlan]:
+        """The graph's current Gopher Mesh plan (shard_map backend only):
+        built from the host block's traffic profile, cached until a version
+        bump or an escalation replaces it. Engines on the local backend
+        resolve exchange='auto' to the dense path and take no plan."""
+        if self.backend != "shard_map":
+            return None
+        if graph not in self._tier_plans:
+            host = self._host_gb.get(graph)
+            if host is None:
+                self._graph_block(graph)          # builds the host twin
+                host = self._host_gb[graph]
+            self._tier_plans[graph] = TierPlan.from_block(host)
+        return self._tier_plans[graph]
 
     def _engine(self, graph: str, family: str, Q: int) -> GopherEngine:
         key = (graph, family, Q)
@@ -280,7 +310,8 @@ class GraphQueryService:
                 max_ss = 4096
             self._engines[key] = GopherEngine(
                 pg, prog, backend=self.backend, mesh=self.mesh,
-                max_supersteps=max_ss, gb=self._graph_block(graph))
+                max_supersteps=max_ss, gb=self._graph_block(graph),
+                tier_plan=self._tier_plan(graph))
         return self._engines[key]
 
     # ---------------- landmark tier (approximate SSSP, zero supersteps) ----

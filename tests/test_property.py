@@ -173,12 +173,14 @@ def test_mamba2_vs_mamba1_style_recurrence(S, seed):
 @given(st.integers(20, 90), st.floats(1.5, 4.0), st.integers(2, 5),
        st.integers(0, 10_000), st.integers(1, 25), st.integers(0, 12))
 def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
-    """Gopher Wire: any random delta batch over any random graph — the
-    compacted exchange on the zero-repack-patched block gives bit-identical
-    SSSP/CC results to the dense exchange on a cold-packed block of the
-    same graph version."""
-    from repro.core import (GopherEngine, SemiringProgram, device_block,
-                            host_graph_block, init_max_vertex,
+    """Gopher Wire/Mesh: any random delta batch over any random graph — the
+    compacted, tiered and auto exchanges on the zero-repack-patched block
+    give bit-identical SSSP/CC results to the dense exchange on a
+    cold-packed block of the same graph version (tiered may route through
+    its dense fallback when the delta overflows a tier; the result contract
+    is unconditional)."""
+    from repro.core import (GopherEngine, SemiringProgram, TierPlan,
+                            device_block, host_graph_block, init_max_vertex,
                             make_sssp_init)
     from repro.gofs import EdgeDelta, apply_delta
     rng = np.random.default_rng(seed)
@@ -202,12 +204,17 @@ def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
                       block=host_graph_block(pg0))
     pg1 = res.pg
     cold = host_graph_block(pg1)
+    gb_patched = device_block(res.block)
     for sr, init in [("max_first", init_max_vertex),
                      ("min_plus", make_sssp_init(int(pg1.part_of[0]),
                                                  int(pg1.local_of[0])))]:
         prog = SemiringProgram(semiring=sr, init_fn=init)
         s_ref, _ = GopherEngine(pg1, prog, gb=device_block(cold),
                                 exchange="dense").run()
-        s_new, _ = GopherEngine(pg1, prog, gb=device_block(res.block),
-                                exchange="compact").run()
-        assert np.array_equal(np.asarray(s_ref["x"]), np.asarray(s_new["x"]))
+        for mode in ("compact", "tiered", "auto"):
+            plan = (TierPlan.from_block(res.block) if mode == "tiered"
+                    else None)
+            s_new, _ = GopherEngine(pg1, prog, gb=gb_patched, exchange=mode,
+                                    tier_plan=plan).run()
+            assert np.array_equal(np.asarray(s_ref["x"]),
+                                  np.asarray(s_new["x"])), (sr, mode)
