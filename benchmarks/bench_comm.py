@@ -1,9 +1,9 @@
-"""Gopher Wire/Mesh: communication volume of the superstep exchange.
+"""Gopher Wire/Mesh/Phases: communication volume of the superstep exchange.
 
 Scenario (the RN-analogue incremental workload): a converged CC/BFS/SSSP
 fixpoint on the road network at version k, a 1% edge-insert batch arrives,
 and the frontier-seeded incremental restart re-converges on version k+1.
-Four wire disciplines are measured:
+Five wire disciplines are measured:
 
   dense     every partition pair's full cap-slot row, every superstep — the
             physical buffer geometry AND the parity oracle
@@ -13,43 +13,74 @@ Four wire disciplines are measured:
             taught by version k's runs puts quiet pairs in width-1 cold /
             cap/8 warm tiers, so the geometry the exchange actually routes
             tracks the frontier too
-  auto      the engine default (dense on local, tiered on shard_map)
+  auto      the engine default (dense on local and 1-device meshes, tiered
+            on multi-device shard_map)
+  phased    Gopher Phases: frontier-PHASED tier schedules — one segmented
+            BSP loop per frontier band, so a SINGLE run's geometry rides
+            the contraction (per-phase wire histograms land in the
+            artifact)
 
-The version-k flow teaches the per-pair traffic profile exactly as a
-production deployment would: the converged cold run plus one quiesced
-resume feed core.tiers.update_profile, and apply_delta pre-announces the
-delta's dirty frontier.
+The version-k flow teaches the per-pair traffic profile and the
+changed-histogram EWMA exactly as a production deployment would: the
+converged cold run plus one quiesced resume feed
+core.tiers.update_profile / update_changed_profile, and apply_delta
+pre-announces the delta's dirty frontier (warm floor bounded by the
+expected superstep horizon).
 
 Recorded per (algo, mode): total exchanged slots, bytes-on-wire,
 per-superstep wire/changed histograms, wall time — with results asserted
 BIT-IDENTICAL across modes on both backends, the tiered run asserted
 SPILL-FREE, and its per-round physical geometry asserted <= 25% of the
 dense P²·cap (the Gopher Mesh acceptance gate; CI runs this file on main).
-A tier-churn scenario (hotspot migrating across partition pairs over 10
-versions) records escalation counts and bytes-vs-dense as the profile
-chases the load. Writes BENCH_comm.json.
+The COLD-PLAN scenario (cold_phased_scenario) gates Gopher Phases: on a
+fresh-replica block with no taught pair profile, the phased run must land
+<= 40% of dense — the band the static plan only reaches warm. A tier-churn
+scenario (hotspot migrating across partition pairs over 10 versions)
+records escalation counts and bytes-vs-dense as the profile chases the
+load. Writes BENCH_comm.json.
 """
 from __future__ import annotations
 
 import numpy as np
 
 
-def _teach_profile(pg, hb, prog_cold, semiring):
+def _teach_profile(pg, hb, prog_cold, semiring, pairs: bool = True):
     """Version-k history: one converged cold run + one quiesced resume,
-    folded into the host block's wire_ewma. Returns the converged state."""
+    folded into the host block's wire_ewma (pairs=True) and its
+    changed-histogram EWMA. ``pairs=False`` models a FRESH REPLICA that
+    never learned the per-pair profile — only the run-shape history the
+    phased plans ride — the cold-plan scenario. Returns the converged
+    state."""
     from repro.core import (GopherEngine, SemiringProgram, device_block,
-                            update_profile)
+                            update_changed_profile, update_profile)
     gbd = device_block(hb)
     state, tele = GopherEngine(pg, prog_cold, gb=gbd,
                                exchange="compact").run()
-    update_profile(hb, tele.pair_slots, tele.pair_rounds)
+    if pairs:
+        update_profile(hb, tele.pair_slots, tele.pair_rounds)
+    update_changed_profile(hb, tele.count_hist)
     ident = np.inf if semiring == "min_plus" else -np.inf
     x0 = np.where(pg.vmask, np.asarray(state["x"], np.float32), ident)
     prog_res = SemiringProgram(semiring=semiring, resume=True)
     _, tq = GopherEngine(pg, prog_res, gb=gbd, exchange="compact").run(
         extra={"x0": x0, "frontier0": np.zeros_like(pg.vmask)})
-    update_profile(hb, tq.pair_slots, tq.pair_rounds)
+    if pairs:
+        update_profile(hb, tq.pair_slots, tq.pair_rounds)
+    update_changed_profile(hb, tq.count_hist)
     return np.asarray(state["x"])
+
+
+def _delta_1pct(g, pg0, hb, weighted, seed=7):
+    """The RN-analogue 1% edge-insert batch, applied with the zero-repack
+    block path."""
+    from benchmarks.bench_incremental import _reopened_edges
+    from repro.gofs import EdgeDelta, apply_delta
+    num_ins = max(1, (g.nnz // 2) // 100)          # the 1% batch
+    iu, iv = _reopened_edges(g, 100, 100, num_ins, seed=seed)
+    iw = (np.random.default_rng(8).uniform(5.0, 10.0, iu.size)
+          .astype(np.float32) if weighted else None)
+    return apply_delta(pg0, EdgeDelta.inserts(iu, iv, iw),
+                       directed=False, block=hb)
 
 
 def run(write_json: bool = True):
@@ -70,16 +101,10 @@ def run(write_json: bool = True):
 
     records = {"dataset": "RN", "n": g_u.n, "num_parts": NUM_PARTS}
 
-    def delta_for(g, pg0, hb, weighted, seed=7):
-        from benchmarks.bench_incremental import _reopened_edges
-        num_ins = max(1, (g.nnz // 2) // 100)          # the 1% batch
-        iu, iv = _reopened_edges(g, 100, 100, num_ins, seed=seed)
-        iw = (np.random.default_rng(8).uniform(5.0, 10.0, iu.size)
-              .astype(np.float32) if weighted else None)
-        return apply_delta(pg0, EdgeDelta.inserts(iu, iv, iw),
-                           directed=False, block=hb)
+    delta_for = _delta_1pct
 
     def bench(algo, g, pg0, semiring, init_fn):
+        from repro.core import PhasedTierPlan
         # ---- version k: converge + teach the traffic profile ----
         hb = host_graph_block(pg0)
         prog_cold = SemiringProgram(semiring=semiring, init_fn=init_fn)
@@ -89,19 +114,24 @@ def run(write_json: bool = True):
         pg1 = res.pg
         gb_dev = device_block(res.block)
         plan = TierPlan.from_block(res.block)
+        plan_ph = PhasedTierPlan.for_resume(res.block)
         x0 = np.where(pg1.vmask, np.asarray(prev_x, np.float32),
                       np.inf if semiring == "min_plus" else -np.inf)
         frontier = res.dirty_insert & pg1.vmask
         extra = {"x0": x0, "frontier0": frontier}
         rec = {"insert_edges": int(res.stats["inserted"]) // 2,
                "mailbox_cap": pg1.mailbox_cap,
-               "tiers": plan.counts()}
+               "tiers": plan.counts(),
+               "phases": plan_ph.counts(),
+               "phase_boundaries": [int(b) for b in plan_ph.boundaries]}
 
         outs = {}
-        for mode in ("dense", "compact", "tiered", "auto"):
+        for mode in ("dense", "compact", "tiered", "auto", "phased"):
             prog = SemiringProgram(semiring=semiring, resume=True)
             eng = GopherEngine(pg1, prog, gb=gb_dev, exchange=mode,
-                               tier_plan=(plan if mode == "tiered" else None))
+                               tier_plan=(plan if mode == "tiered"
+                                          else plan_ph if mode == "phased"
+                                          else None))
             (state, tele), dt = timed(eng.run, warmup=True, repeats=3,
                                       extra=extra)
             outs[mode] = np.asarray(state["x"])
@@ -119,9 +149,17 @@ def run(write_json: bool = True):
                 rec[mode]["retried"] = bool(tele.retried)
                 assert not tele.retried, \
                     f"{algo}: tiered run spilled on the taught profile"
+            if mode == "phased":
+                rec[mode]["spills"] = int(tele.spills)
+                rec[mode]["dense_retry_steps"] = int(tele.dense_retry_steps)
+                rec[mode]["phase_hist"] = [int(x) for x in tele.phase_hist]
+                rec[mode]["phase_switch_steps"] = \
+                    [int(x) for x in tele.phase_switch_steps]
+                rec[mode]["phase_wire_hist"] = \
+                    [int(x) for x in tele.phase_wire]
             emit(f"comm_{algo}_inc_{mode}_RN", dt,
                  f"slots={tele.wire_slots};bytes={tele.bytes_on_wire}")
-        for mode in ("compact", "tiered", "auto"):
+        for mode in ("compact", "tiered", "auto", "phased"):
             assert np.array_equal(outs["dense"], outs[mode]), \
                 f"{algo}: {mode} exchange diverged from dense"
         # auto on local resolves to the dense path (the PR 3 compact-
@@ -134,10 +172,11 @@ def run(write_json: bool = True):
             f"{algo}: auto ({rec['auto']['us_per_run']}us) regressed the " \
             f"dense path ({rec['dense']['us_per_run']}us)"
 
-        # ---- shard_map backend: tiered physical wire + parity ----
+        # ---- shard_map backend: tiered physical wire + parity (explicit —
+        # auto resolves dense on this degenerate 1-device CI mesh) ----
         prog = SemiringProgram(semiring=semiring, resume=True)
         eng_sm = GopherEngine(pg1, prog, backend="shard_map", mesh=mesh,
-                              exchange="auto", tier_plan=plan)
+                              exchange="tiered", tier_plan=plan)
         state_sm, tele_sm = eng_sm.run(extra=extra)
         assert tele_sm.exchange == "tiered"
         assert np.array_equal(np.asarray(state_sm["x"]), outs["dense"]), \
@@ -189,10 +228,100 @@ def run(write_json: bool = True):
     bench("sssp", g_w, pg_w, "min_plus",
           make_sssp_init(int(pg_w.part_of[0]), int(pg_w.local_of[0])))
 
+    records["cold_phased"] = cold_phased_scenario()
     records["tier_churn"] = churn_scenario()
     if write_json:
         write_bench_json("comm", records)
     return records
+
+
+def cold_phased_scenario():
+    """The Gopher Phases acceptance gate: the RN 1%-insert incremental
+    restart on a FRESH-REPLICA block whose per-pair profile was never
+    taught (wire_ewma = the structural prior) — only the changed-histogram
+    run shape is known. PR 4's static plan built from such a block is the
+    structural worst-case geometry for EVERY round of the run; the phased
+    plan rides the contraction inside the single run — the wide phase keeps
+    the structural safety, the demotion trigger drops to the narrow bands
+    as soon as the observed counts fit, and any narrow-phase overflow
+    costs one dense-retried round, never correctness.
+
+    Gated (CI runs this file on main): phased total routed slots <= 40% of
+    the dense rounds·P²·cap AND strictly under the static cold plan, with
+    results bit-identical to dense on both backends."""
+    from benchmarks.common import NUM_PARTS, emit, get_pg
+    from repro.core import (GopherEngine, PhasedTierPlan, SemiringProgram,
+                            TierPlan, compat, device_block, host_graph_block,
+                            init_max_vertex, make_sssp_init)
+
+    g, pg0 = get_pg("RN")
+    mesh = compat.make_mesh((1,), ("parts",))
+    out = {}
+    for algo, semiring, init_fn in (
+            ("cc", "max_first", init_max_vertex),
+            ("bfs", "min_plus", make_sssp_init(int(pg0.part_of[0]),
+                                               int(pg0.local_of[0])))):
+        hb = host_graph_block(pg0)
+        prog_cold = SemiringProgram(semiring=semiring, init_fn=init_fn)
+        prev = _teach_profile(pg0, hb, prog_cold, semiring, pairs=False)
+        res = _delta_1pct(g, pg0, hb, weighted=False)
+        pg1 = res.pg
+        gb_dev = device_block(res.block)
+        static = TierPlan.from_block(res.block)      # structural: the PR 4
+                                                     # cold plan
+        phased = PhasedTierPlan.for_resume(res.block)
+        ident = np.inf if semiring == "min_plus" else -np.inf
+        x0 = np.where(pg1.vmask, np.asarray(prev, np.float32), ident)
+        extra = {"x0": x0, "frontier0": res.dirty_insert & pg1.vmask}
+        P, cap = pg1.num_parts, pg1.mailbox_cap
+        rec = {"phases": phased.counts(),
+               "phase_boundaries": [int(b) for b in phased.boundaries]}
+        runs = {}
+        for mode, plan in (("dense", None), ("tiered", static),
+                           ("phased", phased)):
+            prog = SemiringProgram(semiring=semiring, resume=True)
+            eng = GopherEngine(pg1, prog, gb=gb_dev, exchange=mode,
+                               tier_plan=plan)
+            state, tele = eng.run(extra=extra)
+            runs[mode] = np.asarray(state["x"])
+            dense_total = (tele.supersteps + 1) * P * P * cap
+            rec[mode] = dict(
+                supersteps=int(tele.supersteps),
+                wire_slots=int(tele.wire_slots),
+                bytes_on_wire=int(tele.bytes_on_wire),
+                geometry_frac=round(tele.wire_slots / dense_total, 4))
+            if mode == "phased":
+                rec[mode]["spills"] = int(tele.spills)
+                rec[mode]["dense_retry_steps"] = int(tele.dense_retry_steps)
+                rec[mode]["phase_hist"] = [int(x) for x in tele.phase_hist]
+                rec[mode]["phase_switch_steps"] = \
+                    [int(x) for x in tele.phase_switch_steps]
+                rec[mode]["phase_wire_hist"] = \
+                    [int(x) for x in tele.phase_wire]
+                rec[mode]["wire_hist"] = [int(x) for x in tele.wire_hist]
+        for mode in ("tiered", "phased"):
+            assert np.array_equal(runs["dense"], runs[mode]), \
+                f"cold {algo}: {mode} diverged from dense"
+        # shard_map parity for the phased cold plan
+        prog = SemiringProgram(semiring=semiring, resume=True)
+        st_sm, tt_sm = GopherEngine(pg1, prog, backend="shard_map",
+                                    mesh=mesh, exchange="phased",
+                                    tier_plan=phased).run(extra=extra)
+        assert np.array_equal(runs["dense"], np.asarray(st_sm["x"])), \
+            f"cold {algo}: shard_map phased diverged"
+        # THE GATE: a cold phased run lands in the 25-40%-of-dense band the
+        # static plan only reaches with a taught (warm) profile
+        frac = rec["phased"]["geometry_frac"]
+        assert frac <= 0.40, \
+            f"cold {algo}: phased geometry {frac} > 40% of dense"
+        assert rec["phased"]["wire_slots"] < rec["tiered"]["wire_slots"], \
+            f"cold {algo}: phased did not beat the static cold plan"
+        rec["static_frac"] = rec["tiered"]["geometry_frac"]
+        out[algo] = rec
+        emit(f"comm_{algo}_cold_phased_RN", 0.0,
+             f"frac={frac};static={rec['static_frac']};"
+             f"switches={rec['phased']['phase_switch_steps']}")
+    return out
 
 
 def churn_scenario(versions: int = 10):

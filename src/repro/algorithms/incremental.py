@@ -94,7 +94,8 @@ def _incremental_run(pg: PartitionedGraph, semiring: str, prev_x: np.ndarray,
                      backend: str = "local", mesh=None,
                      spmv_backend: Optional[str] = None,
                      max_local_iters: Optional[int] = None,
-                     gb: Optional[dict] = None):
+                     gb: Optional[dict] = None, exchange: str = "auto",
+                     tier_plan=None):
     x0 = np.array(prev_x, np.float32, copy=True)
     frontier = np.asarray(delta.dirty_insert, bool).copy()
     if delta.dirty_remove.any():
@@ -106,8 +107,11 @@ def _incremental_run(pg: PartitionedGraph, semiring: str, prev_x: np.ndarray,
                            spmv_backend=spmv_backend,
                            max_local_iters=max_local_iters)
     # gb: pass the zero-repack-patched device block (DeltaResult.block via
-    # core.blocks.device_block) so the restart skips the per-version re-pack
-    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh, gb=gb)
+    # core.blocks.device_block) so the restart skips the per-version re-pack;
+    # exchange/tier_plan: callers holding a taught profile can route the
+    # restart over a tiered/phased wire (Gopher Mesh/Phases)
+    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh, gb=gb,
+                       exchange=exchange, tier_plan=tier_plan)
     return eng.run(extra={"x0": x0, "frontier0": frontier})
 
 
@@ -115,7 +119,8 @@ def incremental_sssp(pg: PartitionedGraph, source_global: int,
                      prev_dist: np.ndarray, delta: DeltaResult,
                      backend: str = "local", mesh=None,
                      spmv_backend: Optional[str] = None,
-                     gb: Optional[dict] = None):
+                     gb: Optional[dict] = None, exchange: str = "auto",
+                     tier_plan=None):
     """SSSP on graph version k+1 from version k's distances. Returns
     (distances (P, v_max), Telemetry) — bit-identical to a cold sssp()."""
     init = np.full((pg.num_parts, pg.v_max), np.inf, np.float32)
@@ -124,7 +129,8 @@ def incremental_sssp(pg: PartitionedGraph, source_global: int,
     prev_x = np.where(pg.vmask, np.asarray(prev_dist, np.float32), np.inf)
     state, tele = _incremental_run(pg, "min_plus", prev_x, delta, init,
                                    backend=backend, mesh=mesh,
-                                   spmv_backend=spmv_backend, gb=gb)
+                                   spmv_backend=spmv_backend, gb=gb,
+                                   exchange=exchange, tier_plan=tier_plan)
     dist = np.array(state["x"])
     dist[~pg.vmask] = np.inf
     return dist, tele
@@ -134,17 +140,20 @@ def incremental_bfs(pg: PartitionedGraph, source_global: int,
                     prev_levels: np.ndarray, delta: DeltaResult,
                     backend: str = "local", mesh=None,
                     spmv_backend: Optional[str] = None,
-                    gb: Optional[dict] = None):
+                    gb: Optional[dict] = None, exchange: str = "auto",
+                    tier_plan=None):
     """BFS = SSSP over unit weights (graph must carry unit weights)."""
     return incremental_sssp(pg, source_global, prev_levels, delta,
                             backend=backend, mesh=mesh,
-                            spmv_backend=spmv_backend, gb=gb)
+                            spmv_backend=spmv_backend, gb=gb,
+                            exchange=exchange, tier_plan=tier_plan)
 
 
 def incremental_sssp_batched(pg: PartitionedGraph, sources_global,
                              prev_dist: np.ndarray, delta: DeltaResult,
                              backend: str = "local", mesh=None,
-                             gb: Optional[dict] = None):
+                             gb: Optional[dict] = None,
+                             exchange: str = "auto", tier_plan=None):
     """Q-source incremental SSSP: resume ALL query lanes from their previous
     fixpoints in ONE batched BSP run (the landmark-maintenance path —
     ROADMAP item 4). ``prev_dist`` is (Q, n_global) in global vertex order
@@ -157,7 +166,10 @@ def incremental_sssp_batched(pg: PartitionedGraph, sources_global,
     reset each lane's meta-reachable region to its OWN cold init before the
     restart. ``gb`` lets the caller pass the (possibly zero-repack-patched)
     device graph block so the maintenance run shares the serving fleet's
-    device copy."""
+    device copy; ``exchange``/``tier_plan`` let the serving layer route the
+    refresh over its narrow-only phased plan
+    (core.tiers.PhasedTierPlan.narrow_resume — this run IS a narrow-frontier
+    resume from superstep 0, so it never needs the wide band's geometry)."""
     from repro.serving.batched import (BatchedSemiringProgram,
                                        gather_query_results, sssp_query_init)
     sources_global = np.asarray(sources_global, np.int64).reshape(-1)
@@ -178,7 +190,8 @@ def incremental_sssp_batched(pg: PartitionedGraph, sources_global,
     qf = np.broadcast_to(frontier[..., None], x0.shape)
     prog = BatchedSemiringProgram(semiring="min_plus", num_queries=L,
                                   resume=True)
-    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh, gb=gb)
+    eng = GopherEngine(pg, prog, backend=backend, mesh=mesh, gb=gb,
+                       exchange=exchange, tier_plan=tier_plan)
     state, tele = eng.run_queries(extra={"qx0": x0, "qfrontier0": qf})
     return gather_query_results(pg, state["x"]), tele
 
@@ -187,7 +200,8 @@ def incremental_connected_components(
         pg: PartitionedGraph, prev_labels: np.ndarray, delta: DeltaResult,
         backend: str = "local", mesh=None,
         spmv_backend: Optional[str] = None,
-        gb: Optional[dict] = None) -> Tuple[np.ndarray, int, object]:
+        gb: Optional[dict] = None, exchange: str = "auto",
+        tier_plan=None) -> Tuple[np.ndarray, int, object]:
     """HCC labels on graph version k+1 from version k's labels. Returns
     (labels, num_components, Telemetry) — bit-identical to a cold run."""
     gid = pg.global_id.astype(np.float32)
@@ -195,7 +209,8 @@ def incremental_connected_components(
     prev_x = np.where(pg.vmask, np.asarray(prev_labels, np.float32), -np.inf)
     state, tele = _incremental_run(pg, "max_first", prev_x, delta, init,
                                    backend=backend, mesh=mesh,
-                                   spmv_backend=spmv_backend, gb=gb)
+                                   spmv_backend=spmv_backend, gb=gb,
+                                   exchange=exchange, tier_plan=tier_plan)
     x = np.asarray(state["x"])
     labels = np.where(pg.vmask, x, -1).astype(np.int64)
     ncc = len(np.unique(labels[pg.vmask]))

@@ -39,6 +39,13 @@ _GB_FIELDS = ["nbr", "wgt", "vmask", "out_degree", "global_id", "sg_id",
 # stored positions; device_block re-bases onto the runtime cap at upload.
 _SLOT_STRIDE = 1 << 16
 
+# host-only block entries: profile/planning metadata the compiled loop never
+# reads. They stay off the device block — their shapes don't follow the
+# per-partition leading-axis convention the shard_map in_specs assume (and
+# uploading pure planning state would thrash the gb-signature-keyed
+# compiled-loop cache).
+_HOST_ONLY = ("changed_ewma", "announce_ewma")
+
 
 def _binned_adjacency(pg: PartitionedGraph, lane_pad: int = 8):
     """Two-bin the local ELL by degree (kernels.ops.binned_ell_spmv_multi
@@ -147,10 +154,16 @@ def host_graph_block(pg: PartitionedGraph) -> dict:
     ``wire_ewma`` (P, P float32) — an EWMA of observed packed slot counts
     per exchange round, seeded here with the STRUCTURAL slot occupancy (the
     worst case any round can ship, so a plan built from a fresh block never
-    overflows). Runs fold observations in via core.tiers.update_profile;
+    overflows) — and the Gopher Phases changed-histogram EWMA
+    ``changed_ewma`` (PHASE_HIST_LEN, float32; host-only) — the expected
+    frontier width per superstep, seeded ZERO (no history: phased plans
+    degenerate to one structural phase until runs teach it via
+    core.tiers.update_changed_profile). Runs fold observations in via
+    core.tiers.update_profile / update_changed_profile;
     gofs.temporal.apply_delta pre-announces a delta's dirty frontier into
-    it; patch_host_block carries it across versions untouched."""
-    from repro.core.tiers import occupancy_from_ob_inv
+    the pair profile; patch_host_block carries both across versions
+    untouched."""
+    from repro.core.tiers import PHASE_HIST_LEN, occupancy_from_ob_inv
     gb = {k: np.asarray(getattr(pg, k)) for k in _GB_FIELDS}
     gb["part_index"] = np.arange(pg.num_parts, dtype=np.int32)
     (gb["nbr_lo"], gb["wgt_lo"], gb["adj_hub_idx"],
@@ -158,6 +171,11 @@ def host_graph_block(pg: PartitionedGraph) -> dict:
     (gb["ob_inv"], gb["ib_lo"],
      gb["ib_hub_idx"], gb["ib_hub"]) = _mailbox_inverse(pg)
     gb["wire_ewma"] = occupancy_from_ob_inv(gb["ob_inv"]).astype(np.float32)
+    gb["changed_ewma"] = np.zeros(PHASE_HIST_LEN, np.float32)
+    # pending announce record (core.tiers.announce_frontier): the exact
+    # per-pair expectation of the NEXT restart's traffic; zero = no delta
+    # pending. Host-only, like changed_ewma.
+    gb["announce_ewma"] = np.zeros_like(gb["wire_ewma"])
     for name, arr in pg.attrs.items():
         gb[f"attr_{name}"] = np.asarray(arr)
     return gb
@@ -178,10 +196,13 @@ def _decode_feeds(host_gb: dict):
 
 def device_block(host_gb: dict) -> dict:
     """Upload a host block to device (jnp) arrays, decoding the feed maps
-    to runtime flat indices (see _SLOT_STRIDE)."""
+    to runtime flat indices (see _SLOT_STRIDE). Host-only metadata
+    (_HOST_ONLY) stays behind."""
     ib_lo, ib_hub = _decode_feeds(host_gb)
     out = {}
     for k, v in host_gb.items():
+        if k in _HOST_ONLY:
+            continue
         if k == "ib_lo":
             v = ib_lo
         elif k == "ib_hub":
@@ -195,7 +216,8 @@ def graph_block(pg: PartitionedGraph, as_spec: bool = False) -> dict:
     ``as_spec=True`` returns ShapeDtypeStructs (dry-run lowering)."""
     gb = host_graph_block(pg)
     if as_spec:
-        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in gb.items()}
+        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                for k, v in gb.items() if k not in _HOST_ONLY}
     return device_block(gb)
 
 

@@ -21,7 +21,7 @@ Two backends share every line of superstep logic:
   'shard_map' — partitions sharded over a mesh axis; mailbox routed with a
                 real all_to_all; halt via psum (multi-chip / dry-run path)
 
-Four wire disciplines share both backends (``exchange=``, see make_exchange):
+Five wire disciplines share both backends (``exchange=``, see make_exchange):
   'dense'     every pair ships its full cap row (the parity oracle; also the
               fastest choice where the physical wire is a single-host
               transpose, hence the 'auto' pick on 'local')
@@ -29,7 +29,12 @@ Four wire disciplines share both backends (``exchange=``, see make_exchange):
               buffer (Gopher Wire)
   'tiered'    capacity-tiered PHYSICAL buffers routed per pair tier (Gopher
               Mesh): the geometry XLA moves tracks the frontier
-  'auto'      the default: 'dense' on 'local', 'tiered' on 'shard_map'
+  'phased'    frontier-PHASED tier schedules (Gopher Phases): one segmented
+              BSP loop per frontier band, so a single run's geometry rides
+              the contraction — wide early rounds, narrow converged tail
+  'auto'      the default: 'dense' on 'local' (and on a 1-device shard_map
+              mesh, where the "wire" is the same single-host transpose),
+              'tiered' on a multi-device 'shard_map' mesh
 """
 from __future__ import annotations
 
@@ -45,7 +50,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import compat
 from repro.core import messages as msg
 from repro.core.blocks import graph_block  # noqa: F401 (re-exported API)
-from repro.core.tiers import TierPlan
+from repro.core.tiers import DEMOTE_STREAK, PhasedTierPlan, TierPlan
 from repro.gofs.formats import PartitionedGraph
 from repro.kernels import ops
 
@@ -107,6 +112,22 @@ class Telemetry:
     spills: int = 0                            # Σ pair_overflow (tier misses)
     escalations: int = 0                       # pairs promoted after spills
     retried: bool = False                      # dense fallback retry ran
+    # Gopher Phases (phased runs; count_hist also on compact/tiered):
+    count_hist: Optional[np.ndarray] = None    # (supersteps,) Σ packed counts
+                                               # per round — the frontier
+                                               # width (feed to
+                                               # tiers.update_changed_profile)
+    phase_hist: Optional[np.ndarray] = None    # (supersteps,) phase index of
+                                               # each superstep's exchange
+    phase_switch_steps: Optional[np.ndarray] = None  # supersteps at which the
+                                               # run crossed into a new phase
+    phase_wire: Optional[np.ndarray] = None    # (K,) routed slots per phase
+                                               # (phase 0 includes the prime)
+    phase_pair_slots: Optional[np.ndarray] = None    # (K, P, P) Σ packed
+                                               # counts per phase
+    dense_retry_steps: int = 0                 # supersteps whose exchange
+                                               # fell back to the dense route
+                                               # after an in-phase overflow
 
     @staticmethod
     def model_bytes(slots: int, num_parts: int, rounds: int, cap: int,
@@ -130,7 +151,7 @@ class GopherEngine:
                  max_supersteps: int = 4096, gb: Optional[dict] = None,
                  exchange: str = "auto", tier_plan: Optional[TierPlan] = None):
         assert backend in ("local", "shard_map")
-        assert exchange in ("auto", "compact", "dense", "tiered")
+        assert exchange in ("auto", "compact", "dense", "tiered", "phased")
         if backend == "shard_map":
             assert mesh is not None
             d = mesh.shape[axis_name]
@@ -141,22 +162,40 @@ class GopherEngine:
         self.mesh = mesh
         self.axis_name = axis_name
         self.max_supersteps = max_supersteps
-        # wire discipline. 'auto' resolves per backend: on 'local' the
-        # physical "wire" is a single-device transpose, so the dense path is
-        # both the fastest and the smallest — any compaction plan is pure
-        # overhead there; on 'shard_map' the tiered exchange makes the
-        # routed buffers track the frontier. 'dense' stays the parity /
-        # benchmark oracle; 'compact' is Gopher Wire's protocol-payload
-        # compaction over dense physical buffers.
+        # wire discipline. 'auto' resolves per backend: on 'local' — and on
+        # a DEGENERATE 1-device shard_map mesh, where every partition shares
+        # one chip — the physical "wire" is a single-device transpose, so
+        # the dense path is both the fastest and the smallest: any
+        # compaction plan is pure overhead there; on a multi-device
+        # 'shard_map' mesh the tiered exchange makes the routed buffers
+        # track the frontier. 'dense' stays the parity / benchmark oracle;
+        # 'compact' is Gopher Wire's protocol-payload compaction over dense
+        # physical buffers; 'phased' (Gopher Phases) is requested
+        # explicitly with a PhasedTierPlan.
         self.exchange_requested = exchange
         if exchange == "auto":
-            exchange = "dense" if backend == "local" else "tiered"
+            local_wire = (backend == "local"
+                          or int(mesh.shape[axis_name]) == 1)
+            exchange = "dense" if local_wire else "tiered"
         self.exchange = exchange
+        # plan/mode normalization, both directions: a PhasedTierPlan under
+        # 'tiered' (e.g. a narrow_resume plan handed to exchange='auto' that
+        # resolved tiered) upgrades the mode to 'phased' — a K=1 phased loop
+        # is the tiered exchange plus the per-superstep dense retry — and a
+        # plain TierPlan under 'phased' wraps as a single phase.
+        if self.exchange == "tiered" and isinstance(tier_plan, PhasedTierPlan):
+            self.exchange = "phased"
         if self.exchange == "tiered" and tier_plan is None:
             # structural default plan: every pair's width covers its maximum
             # possible slot count, so it can never overflow (see TierPlan)
             tier_plan = TierPlan.from_graph(pg)
-        self.tier_plan = tier_plan if self.exchange == "tiered" else None
+        if self.exchange == "phased":
+            if tier_plan is None:
+                tier_plan = PhasedTierPlan.from_graph(pg)
+            elif isinstance(tier_plan, TierPlan):
+                tier_plan = PhasedTierPlan.from_tier_plan(tier_plan)
+        self.tier_plan = (tier_plan
+                          if self.exchange in ("tiered", "phased") else None)
         self._gb = gb                # cached device-side graph block; pass a
                                      # shared one so many engines (a serving
                                      # fleet) reuse a single device copy
@@ -170,12 +209,15 @@ class GopherEngine:
         return self._gb
 
     # ---------------- superstep body (backend-shared) ----------------
-    def make_superstep(self, gb, num_queries: Optional[int] = None):
+    def make_superstep(self, gb, num_queries: Optional[int] = None,
+                       phase: Optional[int] = None):
         """One BSP superstep over a partition batch gb (leading axis = local
         partition count). Returns (state, inbox, changed, liters(P,), nsent,
         wire, extras) — ``wire`` is the superstep's shipped-slot count under
         the engine's exchange mode and ``extras`` carries the per-pair wire
-        telemetry the mode produces (see make_exchange).
+        telemetry the mode produces (see make_exchange). ``phase`` selects
+        the tier table on a phased plan (one superstep body is traced per
+        loop segment).
 
         With ``num_queries=Q`` the program is query-batched: state/inbox
         leaves carry a QUERY-TRAILING (v_max, Q) shape per partition (Q rides
@@ -188,7 +230,7 @@ class GopherEngine:
         axes = ((_VPART_AXIS,) if self.backend == "local"
                 else (_VPART_AXIS, self.axis_name))
 
-        exchange = self.make_exchange(gb, num_queries=Q)
+        exchange = self.make_exchange(gb, num_queries=Q, phase=phase)
 
         def sstep(state, inbox, step):
             new_state, changed, liters = jax.vmap(
@@ -199,7 +241,8 @@ class GopherEngine:
 
         return sstep
 
-    def make_exchange(self, gb, num_queries: Optional[int] = None):
+    def make_exchange(self, gb, num_queries: Optional[int] = None,
+                      phase: Optional[int] = None):
         """The mailbox half of a superstep: state -> (inbox, nsent, wire,
         extras). Split out so the BSP loop can PRIME the first inbox from the
         INITIAL state — without priming, superstep 0 computes with an empty
@@ -208,8 +251,9 @@ class GopherEngine:
         but for PageRank it silently dropped all remote mass from the first
         Jacobi iteration (an error that decays only as damping^k).
 
-        Three wire disciplines (``self.exchange``; 'auto' resolved at
-        construction to 'dense' on local, 'tiered' on shard_map):
+        Four wire disciplines (``self.exchange``; 'auto' resolved at
+        construction to 'dense' on local / 1-device meshes, 'tiered' on
+        multi-device shard_map):
 
         'dense'    every (src, dst) pair ships its full cap-slot row every
                    superstep — identity-filled when the pair is quiescent.
@@ -237,10 +281,21 @@ class GopherEngine:
                    dense fallback retry and escalates the pair for the next
                    version — results are bit-identical to 'dense'
                    unconditionally.
+        'phased'   Gopher Phases: the tiered exchange at ONE phase's tier
+                   table (``phase`` selects it from the PhasedTierPlan; the
+                   segmented BSP loop traces one body per phase). Overflow
+                   handling is PER-SUPERSTEP: the pack's overflow flags are
+                   all-reduced BEFORE routing and the whole superstep's
+                   exchange falls back to the dense route (lax.cond) when
+                   any pair truncated — no messages are ever lost, so the
+                   run needs no whole-run retry; the spilled phase (not the
+                   whole plan) is escalated afterwards. Costs one extra
+                   scalar all-reduce per superstep on shard_map.
 
         ``extras`` is the mode's per-pair telemetry: {} for dense,
         {'pairs': (v, P) packed counts} for compact, plus {'over': (v, P)
-        overflow flags} for tiered. The BSP loop accumulates them into
+        overflow flags} for tiered, plus {'dstep': scalar 0/1 dense-retry
+        flag} for phased. The BSP loop accumulates them into
         Telemetry.pair_slots / pair_overflow — the observations
         core.tiers.update_profile folds into the traffic profile.
         """
@@ -252,9 +307,12 @@ class GopherEngine:
         Q = num_queries
         mode = self.exchange
 
-        if mode == "tiered":
+        if mode in ("tiered", "phased"):
             plan = self.tier_plan
             assert plan is not None
+            if mode == "phased":
+                assert phase is not None, "phased exchange needs a phase index"
+                plan = plan.phase_plans()[phase]
             assert plan.num_parts == num_parts and plan.cap == cap, \
                 "tier plan was built for a different graph geometry"
             D = (1 if self.backend == "local"
@@ -307,7 +365,7 @@ class GopherEngine:
                 iv = jax.vmap(unpack)(route(pvals), route(pinv))
                 wire = jnp.sum(counts).astype(jnp.int32)
                 extras = {"pairs": counts}
-            else:  # tiered
+            else:  # tiered / phased
                 ident = msg.COMBINE_IDENTITY[combine]
                 build = functools.partial(
                     msg.build_outbox_gather if Q is None
@@ -334,15 +392,38 @@ class GopherEngine:
                            else sv4.reshape(R, cap, Qg))
                 pvals, sids, _, counts, over = ops.outbox_pack(
                     sv_rows, act.reshape(R, cap), lim.reshape(R), ident)
-                iv4 = msg.route_tiered(
-                    sv4, pvals.reshape(v_local, num_parts, cap, Qg),
-                    sids.reshape(v_local, num_parts, cap), sched, combine,
-                    axis_name=axis)
+
+                def tier_route(sv4):
+                    return msg.route_tiered(
+                        sv4, pvals.reshape(v_local, num_parts, cap, Qg),
+                        sids.reshape(v_local, num_parts, cap), sched,
+                        combine, axis_name=axis)
+
+                if mode == "tiered":
+                    iv4 = tier_route(sv4)
+                    wire = jnp.int32(sched.device_round_slots())
+                    extras = {"pairs": counts.reshape(v_local, num_parts),
+                              "over": over.reshape(v_local, num_parts)}
+                else:  # phased: per-superstep dense retry on overflow
+                    over_any = jnp.any(over > 0).astype(jnp.int32)
+                    if axis is not None and D > 1:
+                        over_any = jax.lax.psum(over_any, axis)
+                    retry = over_any > 0
+
+                    def dense_route(sv4):
+                        flat = route(sv4.reshape(v_local, num_parts,
+                                                 cap * Qg))
+                        return flat.reshape(v_local, num_parts, cap, Qg)
+
+                    iv4 = jax.lax.cond(retry, dense_route, tier_route, sv4)
+                    wire = jnp.where(
+                        retry, jnp.int32(v_local * num_parts * cap),
+                        jnp.int32(sched.device_round_slots()))
+                    extras = {"pairs": counts.reshape(v_local, num_parts),
+                              "over": over.reshape(v_local, num_parts),
+                              "dstep": retry.astype(jnp.int32)}
                 iv = iv4.reshape(v_local, num_parts,
                                  cap if Q is None else cap * Qg)
-                wire = jnp.int32(sched.device_round_slots())
-                extras = {"pairs": counts.reshape(v_local, num_parts),
-                          "over": over.reshape(v_local, num_parts)}
             inbox = jax.vmap(comb)(iv, gb["ib_lo"], gb["ib_hub_idx"],
                                    gb["ib_hub"])
             return inbox, nsent, wire, extras
@@ -357,8 +438,11 @@ class GopherEngine:
         own flags went quiet stops producing messages (its send mask is gated
         on per-query changed_v) while the rest of the batch keeps moving.
         """
+        if self.exchange == "phased":
+            return self._run_phased(gb, num_queries=num_queries)
         prog = self.program
         Q = num_queries
+        mode = self.exchange
         sstep = self.make_superstep(gb, num_queries=Q)
         p_local = gb["vmask"].shape[0]
         state0 = jax.vmap(prog.init)(gb)
@@ -373,6 +457,10 @@ class GopherEngine:
                      hist=jnp.zeros((self.max_supersteps,), jnp.int32),
                      whist=jnp.zeros((self.max_supersteps,), jnp.int32),
                      sent=nsent0, wire=wire0)
+        if mode in ("compact", "tiered"):
+            # per-superstep Σ packed counts — the frontier-width histogram
+            # the changed-profile EWMA (Gopher Phases) learns from
+            tele0["chist"] = jnp.zeros((self.max_supersteps,), jnp.int32)
         # per-pair wire telemetry (compact/tiered): rows stay device-local,
         # the out_specs shard them back to the full (P, P) matrices
         for k, v in ex0.items():
@@ -390,31 +478,37 @@ class GopherEngine:
                                                                    inbox, step)
             # the halt vote rides the same reduction as the wire counters:
             # ONE fused psum per superstep carries [pairs-changed?, nsent,
-            # wire(, per-query changed)] — the count vector the compact
-            # exchange produces anyway — instead of a separate all-reduce
-            # round per counter.
+            # wire, counts(, per-query changed)] — the count vector the
+            # compact exchange produces anyway — instead of a separate
+            # all-reduce round per counter.
+            cnt = (jnp.sum(ex["pairs"]).astype(jnp.int32)
+                   if "pairs" in ex else jnp.int32(0))
             if Q is None:
                 nchanged = jnp.sum(changed.astype(jnp.int32))
-                stats = jnp.stack([nchanged, nsent, wire])
+                stats = jnp.stack([nchanged, nsent, wire, cnt])
                 if self.backend == "shard_map":
                     stats = jax.lax.psum(stats, self.axis_name)
-                nchanged, nsent, wire = stats[0], stats[1], stats[2]
+                nchanged, nsent, wire, cnt = (stats[0], stats[1], stats[2],
+                                              stats[3])
                 any_changed = nchanged > 0
             else:
                 changed_q = jnp.any(changed, axis=0).astype(jnp.int32)  # (Q,)
                 nchanged = jnp.sum(jnp.any(changed, axis=-1).astype(jnp.int32))
                 stats = jnp.concatenate(
-                    [jnp.stack([nchanged, nsent, wire]), changed_q])
+                    [jnp.stack([nchanged, nsent, wire, cnt]), changed_q])
                 if self.backend == "shard_map":
                     stats = jax.lax.psum(stats, self.axis_name)
-                nchanged, nsent, wire = stats[0], stats[1], stats[2]
-                changed_q = stats[3:]
+                nchanged, nsent, wire, cnt = (stats[0], stats[1], stats[2],
+                                              stats[3])
+                changed_q = stats[4:]
                 any_changed = jnp.any(changed_q > 0)
             new_tele = dict(liters=tele["liters"] + liters,
                             hist=tele["hist"].at[step].set(nchanged),
                             whist=tele["whist"].at[step].set(wire),
                             sent=tele["sent"] + nsent,
                             wire=tele["wire"] + wire)
+            if "chist" in tele:
+                new_tele["chist"] = tele["chist"].at[step].set(cnt)
             for k, v in ex.items():
                 new_tele[k] = tele[k] + v
             if Q is not None:
@@ -424,6 +518,142 @@ class GopherEngine:
 
         state, _, steps, _, tele = jax.lax.while_loop(
             cond, body, (state0, inbox0, jnp.int32(0), jnp.bool_(False), tele0))
+        return state, steps, tele
+
+    def _run_phased(self, gb, num_queries: Optional[int] = None):
+        """Gopher Phases: the BSP loop as K SEGMENTED while-loops, one per
+        phase of the PhasedTierPlan — each segment's exchange tables are
+        trace-time constants at that phase's geometry, and the (state,
+        inbox, halt-vote) carry flows straight across segment boundaries,
+        so the run switches geometry WITHOUT retracing or re-priming.
+
+        A segment ends when any of three things happens:
+          * the predicted switch superstep (``plan.boundaries[k]``) arrives;
+          * the DEMOTION trigger fires — the observed per-pair packed
+            counts fit under the NEXT phase's caps for ``DEMOTE_STREAK``
+            consecutive supersteps (the frontier contracted ahead of
+            prediction: jump to the narrower geometry now);
+          * the global halt vote lands (a phase that quiesces before its
+            boundary early-exits, and every later segment's loop runs ZERO
+            iterations — the compiled segments are still traced, but cost
+            nothing at run time).
+
+        Per-superstep overflow falls back to the dense route inside the
+        segment (see make_exchange 'phased'), so results are exact
+        unconditionally and only the spilling phase is escalated afterwards.
+        """
+        prog = self.program
+        Q = num_queries
+        plan: PhasedTierPlan = self.tier_plan
+        phases = plan.phase_plans()
+        K = plan.num_phases
+        bounds = plan.boundaries
+        num_parts = self.pg.num_parts
+        p_local = gb["vmask"].shape[0]
+        ssteps = [self.make_superstep(gb, num_queries=Q, phase=k)
+                  for k in range(K)]
+        state0 = jax.vmap(prog.init)(gb)
+        inbox0, nsent0, wire0, ex0 = self.make_exchange(
+            gb, num_queries=Q, phase=0)(state0)
+        if self.backend == "shard_map":
+            s0 = jax.lax.psum(jnp.stack([nsent0, wire0]), self.axis_name)
+            nsent0, wire0 = s0[0], s0[1]
+        tele0 = dict(
+            liters=jnp.zeros((p_local,), jnp.int32),
+            hist=jnp.zeros((self.max_supersteps,), jnp.int32),
+            whist=jnp.zeros((self.max_supersteps,), jnp.int32),
+            chist=jnp.zeros((self.max_supersteps,), jnp.int32),
+            phist=jnp.zeros((self.max_supersteps,), jnp.int32),
+            sent=nsent0, wire=wire0,
+            # per-pair phase buckets keep the local-parts axis LEADING so
+            # the shard_map out_specs reassemble them like every other
+            # per-pair matrix: (v_local, K, P) -> (P, K, P)
+            pairs=jnp.zeros((p_local, K, num_parts), jnp.int32
+                            ).at[:, 0].add(ex0["pairs"]),
+            over=jnp.zeros((p_local, K, num_parts), jnp.int32
+                           ).at[:, 0].add(ex0["over"]),
+            dsteps=ex0["dstep"],
+            seg_end=jnp.zeros((K,), jnp.int32))
+        if Q is not None:
+            tele0["qsteps"] = jnp.zeros((Q,), jnp.int32)
+
+        carry = (state0, inbox0, jnp.int32(0), jnp.bool_(False),
+                 jnp.int32(0), tele0)
+        for k in range(K):
+            nlim_np = phases[k + 1].limits() if k < K - 1 else None
+            sstep = ssteps[k]
+
+            def cond(c, _k=k):
+                _, _, step, done, streak, _ = c
+                go = (~done) & (step < self.max_supersteps)
+                if _k < K - 1:
+                    go &= (step < bounds[_k]) & (streak < DEMOTE_STREAK)
+                return go
+
+            def body(c, _k=k, _nlim=nlim_np, _sstep=sstep):
+                state, inbox, step, _, streak, tele = c
+                state, inbox, changed, liters, nsent, wire, ex = _sstep(
+                    state, inbox, step)
+                cnt = jnp.sum(ex["pairs"]).astype(jnp.int32)
+                if _nlim is None:
+                    viol = jnp.int32(0)
+                else:
+                    nl = jnp.asarray(_nlim)
+                    v_local = ex["pairs"].shape[0]
+                    if self.backend == "shard_map" and p_local < num_parts:
+                        nl = jax.lax.dynamic_slice(
+                            nl, (jax.lax.axis_index(self.axis_name)
+                                 * v_local, 0), (v_local, num_parts))
+                    else:
+                        nl = nl[:v_local]
+                    viol = jnp.sum((ex["pairs"] > nl).astype(jnp.int32))
+                if Q is None:
+                    nchanged = jnp.sum(changed.astype(jnp.int32))
+                    stats = jnp.stack([nchanged, nsent, wire, cnt, viol])
+                    if self.backend == "shard_map":
+                        stats = jax.lax.psum(stats, self.axis_name)
+                    nchanged, nsent, wire, cnt, viol = (
+                        stats[0], stats[1], stats[2], stats[3], stats[4])
+                    any_changed = nchanged > 0
+                else:
+                    changed_q = jnp.any(changed, axis=0).astype(jnp.int32)
+                    nchanged = jnp.sum(jnp.any(changed,
+                                               axis=-1).astype(jnp.int32))
+                    stats = jnp.concatenate(
+                        [jnp.stack([nchanged, nsent, wire, cnt, viol]),
+                         changed_q])
+                    if self.backend == "shard_map":
+                        stats = jax.lax.psum(stats, self.axis_name)
+                    nchanged, nsent, wire, cnt, viol = (
+                        stats[0], stats[1], stats[2], stats[3], stats[4])
+                    changed_q = stats[5:]
+                    any_changed = jnp.any(changed_q > 0)
+                # demotion streak: a dense-retried superstep's counts are
+                # real demand, so they participate like any other round
+                streak = jnp.where(viol == 0, streak + 1, jnp.int32(0))
+                new_tele = dict(
+                    liters=tele["liters"] + liters,
+                    hist=tele["hist"].at[step].set(nchanged),
+                    whist=tele["whist"].at[step].set(wire),
+                    chist=tele["chist"].at[step].set(cnt),
+                    phist=tele["phist"].at[step].set(_k),
+                    sent=tele["sent"] + nsent,
+                    wire=tele["wire"] + wire,
+                    pairs=tele["pairs"].at[:, _k].add(ex["pairs"]),
+                    over=tele["over"].at[:, _k].add(ex["over"]),
+                    dsteps=tele["dsteps"] + ex["dstep"],
+                    seg_end=tele["seg_end"])
+                if Q is not None:
+                    new_tele["qsteps"] = jnp.where(changed_q > 0, step + 1,
+                                                   tele["qsteps"])
+                return state, inbox, step + 1, ~any_changed, streak, new_tele
+
+            state, inbox, step, done, streak, tele = jax.lax.while_loop(
+                cond, body, carry)
+            tele = dict(tele, seg_end=tele["seg_end"].at[k].set(step))
+            carry = (state, inbox, step, done, jnp.int32(0), tele)
+
+        state, _, steps, _, _, tele = carry
         return state, steps, tele
 
     # ---------------- drivers ----------------
@@ -478,7 +708,25 @@ class GopherEngine:
         a DENSE FALLBACK RETRY (bit-identical by construction) plus a tier
         escalation of the overflowed pairs, so the engine's next run — and,
         through the profile, the next graph version's plan — has the width
-        this pair just demonstrated it needs."""
+        this pair just demonstrated it needs.
+
+        Phased runs never need the whole-run retry — an overflowing
+        superstep already routed dense inside the loop — so the close-out
+        only ESCALATES the phases that spilled (each phase's overflow
+        record promotes that phase's pairs; the other phases keep their
+        geometry)."""
+        if self.exchange == "phased":
+            t = self._telemetry(steps, tele, num_queries=num_queries)
+            if t.spills:
+                over_k = np.transpose(np.asarray(tele["over"]), (1, 0, 2))
+                old = self.tier_plan
+                plan = old
+                for k in range(plan.num_phases):
+                    if over_k[k].any():
+                        plan = plan.escalate_phase(k, over_k[k] > 0)
+                self.tier_plan = plan
+                t.escalations = plan.escalations_from(old)
+            return jax.tree.map(np.asarray, state), t
         if self.exchange != "tiered" or "over" not in tele:
             return (jax.tree.map(np.asarray, state),
                     self._telemetry(steps, tele, num_queries=num_queries))
@@ -522,9 +770,26 @@ class GopherEngine:
         wire = int(tele["wire"]) if "wire" in tele else 0
         if rounds is None:
             rounds = steps + 1                   # supersteps + inbox prime
-        if exchange == "tiered":
-            D = (1 if self.backend == "local"
-                 else int(self.mesh.shape[self.axis_name]))
+        D = (1 if self.backend == "local"
+             else int(self.mesh.shape[self.axis_name]))
+        phased = exchange == "phased" and "phist" in tele
+        if phased:
+            # per-superstep geometry varies: charge the routed value slots
+            # per round (wire already totals them, dense-retried rounds at
+            # dense geometry) plus each phase's index lanes for its rounds
+            # (a slight overcount on retried rounds — dense ships no ids)
+            K = self.tier_plan.num_phases
+            phist = np.asarray(tele["phist"])[:steps]
+            scheds = [p.schedule(D) for p in self.tier_plan.phase_plans()]
+            rounds_k = np.bincount(phist, minlength=K) if steps else \
+                np.zeros(K, np.int64)
+            rounds_k[0] += 1                     # the prime rides phase 0
+            q = num_queries or 1
+            bytes_on_wire = int(
+                wire * 4 * q
+                + sum(scheds[k].round_index_slots() * int(rounds_k[k]) * 4
+                      for k in range(K)))
+        elif exchange == "tiered":
             bytes_on_wire = (self.tier_plan.schedule(D)
                              .round_bytes(num_queries) * rounds)
         else:
@@ -533,7 +798,8 @@ class GopherEngine:
                 cap=self.pg.mailbox_cap, num_queries=num_queries,
                 compact=exchange == "compact")
         pair_over = (np.asarray(tele["over"]) if "over" in tele else None)
-        return Telemetry(
+        pair_slots = np.asarray(tele["pairs"]) if "pairs" in tele else None
+        t = Telemetry(
             supersteps=steps,
             local_iters=np.asarray(tele["liters"]).reshape(-1),
             changed_hist=np.asarray(tele["hist"])[:steps],
@@ -545,12 +811,33 @@ class GopherEngine:
             wire_slots=wire,
             bytes_on_wire=bytes_on_wire,
             exchange=exchange,
-            pair_slots=(np.asarray(tele["pairs"])
-                        if "pairs" in tele else None),
-            pair_rounds=rounds if "pairs" in tele else 0,
-            pair_overflow=pair_over,
-            spills=int(pair_over.sum()) if pair_over is not None else 0,
+            count_hist=(np.asarray(tele["chist"])[:steps]
+                        if "chist" in tele else None),
         )
+        if phased:
+            # phase buckets travel parts-leading (P, K, P); report (K, P, P)
+            by_phase = np.transpose(pair_slots, (1, 0, 2))
+            over_k = np.transpose(pair_over, (1, 0, 2))
+            t.phase_pair_slots = by_phase
+            t.pair_slots = by_phase.sum(0)
+            t.pair_overflow = over_k.sum(0)
+            t.pair_rounds = rounds
+            t.spills = int(over_k.sum())
+            t.phase_hist = phist
+            whist = np.asarray(tele["whist"])[:steps]
+            seg_end = np.asarray(tele["seg_end"])
+            t.phase_switch_steps = np.unique(seg_end[:-1][seg_end[:-1] < steps])
+            pw = np.zeros(K, np.int64)
+            np.add.at(pw, phist, whist)
+            pw[0] += int(tele["wire"]) - int(whist.sum())   # the prime round
+            t.phase_wire = pw
+            t.dense_retry_steps = int(tele["dsteps"])
+        else:
+            t.pair_slots = pair_slots
+            t.pair_rounds = rounds if pair_slots is not None else 0
+            t.pair_overflow = pair_over
+            t.spills = int(pair_over.sum()) if pair_over is not None else 0
+        return t
 
     def _runner(self, num_queries: Optional[int] = None, gb_example=None,
                 exchange: Optional[str] = None):
@@ -567,7 +854,8 @@ class GopherEngine:
         change any padded shape, instead of paying a full XLA compile per
         graph version."""
         exchange = exchange or self.exchange
-        tier_plan = self.tier_plan if exchange == "tiered" else None
+        tier_plan = (self.tier_plan if exchange in ("tiered", "phased")
+                     else None)
         gb_sig = (tuple(sorted((k, v.shape, str(v.dtype))
                                for k, v in gb_example.items()))
                   if gb_example is not None else None)
@@ -611,9 +899,9 @@ class GopherEngine:
         resume, counters cover the current process's supersteps; the hist
         slots before the restored step are zero)."""
         assert self.backend == "local", "checkpointed runs use the local backend"
-        assert self.exchange != "tiered", \
-            "checkpointed runs use the dense/compact exchange (the tiered " \
-            "overflow retry doesn't span snapshot boundaries)"
+        assert self.exchange not in ("tiered", "phased"), \
+            "checkpointed runs use the dense/compact exchange (tier overflow " \
+            "repair and phase segmentation don't span snapshot boundaries)"
         gb = self._graph_block()
         prog = self.program
         sstep = self.make_superstep(gb)
@@ -696,11 +984,17 @@ class GopherEngine:
                                                  gb_shapes))
         tele_spec = dict(liters=spec, hist=rep, whist=rep, sent=rep, wire=rep)
         # per-pair wire telemetry shards over parts like liters: each
-        # device owns its local source rows of the (P, P) matrices
-        if self.exchange in ("compact", "tiered"):
+        # device owns its local source rows of the (P, P) matrices (phased:
+        # of the (P, K, P) per-phase buckets)
+        if self.exchange in ("compact", "tiered", "phased"):
             tele_spec["pairs"] = spec
-        if self.exchange == "tiered":
+            tele_spec["chist"] = rep
+        if self.exchange in ("tiered", "phased"):
             tele_spec["over"] = spec
+        if self.exchange == "phased":
+            tele_spec["phist"] = rep
+            tele_spec["seg_end"] = rep
+            tele_spec["dsteps"] = rep
         if num_queries is not None:
             tele_spec["qsteps"] = rep
         out_specs = (state_spec, rep, tele_spec)

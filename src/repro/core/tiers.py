@@ -52,6 +52,16 @@ TIER_NAMES = {EXCLUDED: "excluded", COLD: "cold", WARM: "warm", HOT: "hot"}
 COLD_THRESH = 0.5   # expected slots/round at or below this -> cold
 PROFILE_DECAY = 0.25  # update_profile: weight kept on the OLD ewma
 
+# Gopher Phases: the changed-histogram EWMA persisted on the graph block —
+# per-superstep expected frontier width (changed slots per exchange round),
+# folded across runs by update_changed_profile. Phase boundaries, the
+# announce-floor horizon and the per-phase width scaling all derive from it.
+PHASE_HIST_LEN = 64   # supersteps of history kept (EWMA truncates past this)
+CHANGED_EPS = 0.5     # expected slots/round below this counts as quiesced
+WIDE_FRAC = 0.25      # frontier >= this fraction of peak -> the wide phase
+NARROW_FRAC = 0.05    # frontier < this fraction of peak -> the narrow phase
+DEMOTE_STREAK = 2     # consecutive fitting supersteps before a phase demotes
+
 
 def occupancy_from_ob_inv(ob_inv: np.ndarray) -> np.ndarray:
     """(P, P*cap) outbox slot map -> (P, P) live-slot count per pair: the
@@ -163,6 +173,237 @@ class TierPlan:
         return TierSchedule(self, num_devices)
 
 
+# sentinel boundary for a plan's last phase: it runs to quiescence
+_NO_BOUNDARY = 1 << 30
+
+
+def phase_bands(changed_ewma: Optional[np.ndarray],
+                max_phases: int = 3) -> Tuple[Tuple[int, int, float], ...]:
+    """Derive up to ``max_phases`` frontier bands from the changed-histogram
+    EWMA: ``[(end_superstep, span, mean_width), ...]``. A band ends at the
+    first superstep after which the expected width STAYS below its
+    threshold (``WIDE_FRAC`` / ``NARROW_FRAC`` of the peak) — robust to a
+    frontier that briefly dips and rebounds. With no usable history (cold
+    block, all-zero EWMA) there is a single unbounded band."""
+    if changed_ewma is None:
+        return ((_NO_BOUNDARY, _NO_BOUNDARY, 1.0),)
+    ch = np.asarray(changed_ewma, np.float64).reshape(-1)
+    peak = float(ch.max()) if ch.size else 0.0
+    if peak <= CHANGED_EPS:
+        return ((_NO_BOUNDARY, _NO_BOUNDARY, 1.0),)
+    horizon = int(np.flatnonzero(ch >= CHANGED_EPS).max()) + 1
+    # suffix maxima: band k ends where the rest of the run never widens back
+    suf = np.maximum.accumulate(ch[::-1])[::-1]
+    bands = []
+    start = 0
+    fracs = [WIDE_FRAC, NARROW_FRAC] if max_phases >= 3 else [NARROW_FRAC]
+    for frac in fracs[:max_phases - 1]:
+        below = np.flatnonzero(suf < frac * peak)
+        end = int(below.min()) if below.size else horizon
+        end = min(end, horizon)
+        if end - start >= 1:
+            bands.append((end, end - start, float(ch[start:end].mean())))
+            start = end
+    tail = ch[start:horizon]
+    bands.append((_NO_BOUNDARY, max(horizon - start, 1),
+                  float(tail.mean()) if tail.size else 0.0))
+    return tuple(bands)
+
+
+def expected_horizon(changed_ewma: Optional[np.ndarray]) -> Optional[int]:
+    """Expected superstep horizon of the next run: the last superstep the
+    changed-histogram EWMA still expects activity at (plus one). ``None``
+    when there is no usable history — callers must fall back to their
+    unbounded/conservative behavior."""
+    if changed_ewma is None:
+        return None
+    ch = np.asarray(changed_ewma, np.float64).reshape(-1)
+    live = np.flatnonzero(ch >= CHANGED_EPS)
+    if live.size == 0:
+        return None
+    return int(live.max()) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PhasedTierPlan:
+    """Gopher Phases: K per-pair tier tables, one per frontier band of the
+    run, each with a PREDICTED switch superstep. A static :class:`TierPlan`
+    fixes one interconnect geometry for the whole compiled loop even though
+    the frontier contracts by orders of magnitude between round 1 and
+    convergence; a phased plan lets the engine compile one SEGMENTED loop
+    per phase (trace-time-constant tables per segment) and ride the
+    contraction within a single run.
+
+    Derivation (:meth:`from_block`): phase boundaries come from the
+    changed-histogram EWMA persisted on the graph block
+    (``changed_ewma``, fed by :func:`update_changed_profile`); phase k's
+    per-pair expectation is the pair profile scaled by the band's relative
+    frontier width,
+
+        expected_k = min(wire_ewma, occupancy) · mean_k / mean_run
+
+    so the wide band is at least as wide as the static PR 4 plan (on a cold
+    block that degenerates to the structural prior — provably
+    overflow-free) while the narrow tail drops to the converged-frontier
+    geometry a static cold plan only reaches on the NEXT version.
+
+    Hashable — the engine's compiled-loop cache keys on it. ``boundaries``
+    holds each phase's predicted END superstep (the last phase carries the
+    ``_NO_BOUNDARY`` sentinel: it runs to quiescence). The engine may leave
+    a phase EARLY — global halt, or the dynamic demotion trigger (observed
+    per-pair counts under the next phase's caps for ``DEMOTE_STREAK``
+    consecutive supersteps) — and repairs any phase that truncated with a
+    per-superstep dense retry plus a per-phase escalation
+    (:meth:`escalate_phase`)."""
+    num_parts: int
+    cap: int
+    warm_cap: int
+    phase_tier_bytes: Tuple[bytes, ...]
+    boundaries: Tuple[int, ...]
+
+    @property
+    def num_phases(self) -> int:
+        return len(self.phase_tier_bytes)
+
+    def phase_plans(self) -> Tuple[TierPlan, ...]:
+        return tuple(TierPlan(num_parts=self.num_parts, cap=self.cap,
+                              warm_cap=self.warm_cap, tier_bytes=b)
+                     for b in self.phase_tier_bytes)
+
+    def counts(self) -> list:
+        return [p.counts() for p in self.phase_plans()]
+
+    # ---------------- construction ----------------
+    @staticmethod
+    def build(expected: np.ndarray, occupancy: np.ndarray, cap: int,
+              changed_ewma: Optional[np.ndarray] = None, warm_div: int = 8,
+              max_phases: int = 3) -> "PhasedTierPlan":
+        bands = phase_bands(changed_ewma, max_phases=max_phases)
+        ew = np.minimum(np.asarray(expected, np.float64), occupancy)
+        spans = np.array([s for _, s, _ in bands], np.float64)
+        means = np.array([m for _, _, m in bands], np.float64)
+        mean_run = float((spans * means).sum() / max(spans.sum(), 1.0))
+        plans = []
+        for _, _, mean_k in bands:
+            scale = mean_k / mean_run if mean_run > 0 else 1.0
+            plans.append(TierPlan.build(ew * max(scale, 0.0), occupancy, cap,
+                                        warm_div=warm_div))
+        ref = plans[0]
+        return PhasedTierPlan(
+            num_parts=ref.num_parts, cap=ref.cap, warm_cap=ref.warm_cap,
+            phase_tier_bytes=tuple(p.tier_bytes for p in plans),
+            boundaries=tuple(b for b, _, _ in bands))
+
+    @staticmethod
+    def from_block(host_gb: dict, warm_div: int = 8,
+                   max_phases: int = 3) -> "PhasedTierPlan":
+        """Phased plan from a host graph block: structural occupancy from
+        the outbox slot map, pair profile from ``wire_ewma``, phase
+        boundaries from ``changed_ewma``. On a block with no taught
+        changed histogram this degenerates to a single-phase plan identical
+        to ``TierPlan.from_block``."""
+        occ = occupancy_from_ob_inv(host_gb["ob_inv"])
+        ew = host_gb.get("wire_ewma")
+        if ew is None:
+            ew = occ
+        cap = host_gb["ob_inv"].shape[1] // host_gb["ob_inv"].shape[0]
+        return PhasedTierPlan.build(ew, occ, cap,
+                                    changed_ewma=host_gb.get("changed_ewma"),
+                                    warm_div=warm_div, max_phases=max_phases)
+
+    @staticmethod
+    def from_graph(pg, warm_div: int = 8) -> "PhasedTierPlan":
+        """Single structural phase (no history): identical geometry to
+        ``TierPlan.from_graph`` — never overflows."""
+        occ = occupancy_from_graph(pg)
+        return PhasedTierPlan.build(occ, occ, pg.mailbox_cap,
+                                    changed_ewma=None, warm_div=warm_div)
+
+    @staticmethod
+    def from_tier_plan(plan: TierPlan) -> "PhasedTierPlan":
+        return PhasedTierPlan(num_parts=plan.num_parts, cap=plan.cap,
+                              warm_cap=plan.warm_cap,
+                              phase_tier_bytes=(plan.tier_bytes,),
+                              boundaries=(_NO_BOUNDARY,))
+
+    @staticmethod
+    def for_resume(host_gb: dict, warm_div: int = 8,
+                   max_phases: int = 3) -> "PhasedTierPlan":
+        """Phased plan for a POST-DELTA RESTART (an incremental resume from
+        the previous fixpoint). A restart is narrow from round 0 — its
+        traffic is the delta's dirty frontier, not the run-shape history —
+        and apply_delta pre-announced that frontier EXACTLY
+        (``announce_ewma``: per-pair prime-round counts plus the
+        horizon-bounded warm floor). Building phase 0 from the announce
+        record instead of the pair EWMA is what makes a COLD replica's
+        restart cheap: the structural prior (wire_ewma on an untaught
+        block) covers the worst case of ANY run, while the announce covers
+        exactly this one — the prime round provably fits (announced counts
+        are exact, and TierPlan.build gives every pair at least its
+        expected width), and later supersteps ride the warm floor plus the
+        per-superstep dense-retry backstop. Tail phases scale the announce
+        down by the changed-histogram bands' relative widths. Falls back
+        to :meth:`from_block` when no announce is pending (e.g. a re-run
+        with no intervening delta)."""
+        ann = host_gb.get("announce_ewma")
+        if ann is None or not np.any(np.asarray(ann) > 0):
+            return PhasedTierPlan.from_block(host_gb, warm_div=warm_div,
+                                             max_phases=max_phases)
+        occ = occupancy_from_ob_inv(host_gb["ob_inv"])
+        cap = host_gb["ob_inv"].shape[1] // host_gb["ob_inv"].shape[0]
+        ew = np.minimum(np.asarray(ann, np.float64), occ)
+        bands = phase_bands(host_gb.get("changed_ewma"),
+                            max_phases=max_phases)
+        plans = [TierPlan.build(ew, occ, cap, warm_div=warm_div)]
+        mean0 = max(bands[0][2], 1e-9)
+        for _, _, mean_k in bands[1:]:
+            plans.append(TierPlan.build(ew * (mean_k / mean0), occ, cap,
+                                        warm_div=warm_div))
+        ref = plans[0]
+        return PhasedTierPlan(
+            num_parts=ref.num_parts, cap=ref.cap, warm_cap=ref.warm_cap,
+            phase_tier_bytes=tuple(p.tier_bytes for p in plans),
+            boundaries=tuple(b for b, _, _ in bands))
+
+    @staticmethod
+    def narrow_resume(host_gb: dict, warm_div: int = 8) -> "PhasedTierPlan":
+        """Single-phase plan at the resume geometry — for runs that are
+        narrow-frontier resumes from superstep 0 and stay narrow (the
+        landmark refresh path: a handful of stale query lanes re-relaxing
+        a small dirty region never sees the wide band). The widths come
+        from the announce record (:meth:`for_resume`'s phase 0); with no
+        announce pending (a resume with no intervening delta is quiesced)
+        they fall back to the profile plan's NARROW tail. Overflow is
+        repaired by the phased engine's per-superstep dense retry, so
+        underestimating a resume's width costs a retried round, never
+        correctness."""
+        ann = host_gb.get("announce_ewma")
+        announced = ann is not None and bool(np.any(np.asarray(ann) > 0))
+        full = (PhasedTierPlan.for_resume(host_gb, warm_div=warm_div)
+                if announced
+                else PhasedTierPlan.from_block(host_gb, warm_div=warm_div))
+        pick = 0 if announced else -1
+        return PhasedTierPlan(
+            num_parts=full.num_parts, cap=full.cap, warm_cap=full.warm_cap,
+            phase_tier_bytes=(full.phase_tier_bytes[pick],),
+            boundaries=(_NO_BOUNDARY,))
+
+    # ---------------- escalation ----------------
+    def escalate_phase(self, phase: int, pair_mask: np.ndarray
+                       ) -> "PhasedTierPlan":
+        """Promote the overflowed pairs of ONE phase one tier — the other
+        phases' geometry is untouched (a spill in the narrow tail says
+        nothing about the wide band's widths)."""
+        plans = list(self.phase_plans())
+        plans[phase] = plans[phase].escalate(pair_mask)
+        return dataclasses.replace(
+            self, phase_tier_bytes=tuple(p.tier_bytes for p in plans))
+
+    def escalations_from(self, old: "PhasedTierPlan") -> int:
+        return sum(p.escalations_from(q) for p, q in
+                   zip(self.phase_plans(), old.phase_plans()))
+
+
 class TierSchedule:
     """The tier plan laid out on a concrete mesh of ``D`` devices (``v =
     P / D`` partitions each). All tables are numpy constants consumed at
@@ -265,13 +506,18 @@ def announce_frontier(host_gb: dict, pg, dirty: np.ndarray) -> None:
       1. pairs whose SOURCE VERTEX is dirty rise to their exact live-slot
          count — precisely what the next incremental run's inbox-prime
          round ships;
-      2. every pair of a partition in the META-GRAPH CLOSURE of the dirty
-         set rises to a WARM floor (``min(occupancy, COLD_THRESH·2 + 1)``):
-         an incremental superstep's senders can only be partitions the
-         dirty seeds reach through meta-edges, so this keeps every pair
-         that CAN fire during the restart out of the width-1 cold tier —
-         without touching unreachable pairs, and only until quiet runs
-         decay the profile back down.
+      2. every pair of a partition within the restart's EXPECTED SUPERSTEP
+         HORIZON of the dirty set (meta-graph hops) rises to a WARM floor
+         (``min(occupancy, COLD_THRESH·2 + 1)``): an incremental
+         superstep's senders can only be partitions the dirty seeds reach
+         through meta-edges, and in an h-superstep restart they can reach
+         at most h hops — so the floor warms exactly the pairs that CAN
+         fire before the predicted quiescence, not the whole closure. The
+         horizon comes from the block's changed-histogram EWMA
+         (:func:`expected_horizon`); with no taught history the floor
+         falls back to the full meta-closure (PR 4's conservative
+         behavior), and a horizon the history underestimates costs at most
+         an overflow retry, never correctness.
 
     ``max``, not ``+=`` — idempotent across event replays on block
     replicas. Called by gofs.temporal.apply_delta on the zero-repack block
@@ -287,20 +533,35 @@ def announce_frontier(host_gb: dict, pg, dirty: np.ndarray) -> None:
     src_dirty = np.asarray(dirty, bool)[sp, pg.re_src[sp, e]]
     np.add.at(expect, (sp[src_dirty], pg.re_dst_part[sp[src_dirty],
                                                      e[src_dirty]]), 1)
-    # meta-closure warm floor
+    # meta-closure warm floor, bounded by the expected superstep horizon
     occ = occupancy_from_graph(pg)
     reach = np.asarray(dirty, bool).any(1)
     adj = occ > 0
-    while True:
+    horizon = expected_horizon(host_gb.get("changed_ewma"))
+    hops = 0
+    while horizon is None or hops < horizon:
         grown = reach | adj[reach].any(0)
         if (grown == reach).all():
             break
         reach = grown
+        hops += 1
     floor = np.where(reach[:, None], np.minimum(occ, 2 * COLD_THRESH + 1),
                      0.0)
+    announced = np.maximum(expect, floor)
     host_gb["wire_ewma"] = np.maximum(
-        np.asarray(ew, np.float64), np.maximum(expect, floor)
-        ).astype(np.float32)
+        np.asarray(ew, np.float64), announced).astype(np.float32)
+    # the announce record itself, kept SEPARATE from the EWMA: the exact
+    # per-pair expectation of the NEXT restart's traffic. On a fresh
+    # replica the EWMA still sits at the structural prior (the max above is
+    # a no-op), but the restart's prime round ships exactly ``expect`` —
+    # PhasedTierPlan.for_resume builds from this record, which is how a
+    # COLD block still gets restart-narrow geometry. max-combined so
+    # stacked deltas before one run stay covered; consumed (cleared) by
+    # update_profile once a run has folded its observation.
+    prev = host_gb.get("announce_ewma")
+    if prev is not None:
+        announced = np.maximum(np.asarray(prev, np.float64), announced)
+    host_gb["announce_ewma"] = announced.astype(np.float32)
 
 
 def update_profile(host_gb: dict, pair_slots: np.ndarray, rounds: int,
@@ -317,7 +578,11 @@ def update_profile(host_gb: dict, pair_slots: np.ndarray, rounds: int,
     a dense fallback retry, normalize by ``Telemetry.pair_rounds`` — the
     aborted tiered attempt's round count, which the counts actually cover —
     not ``supersteps + 1``. A block with no profile (not built by
-    host_graph_block) is left untouched."""
+    host_graph_block) is left untouched.
+
+    Folding an observation also CONSUMES the pending announce record
+    (``announce_ewma``): the run it pre-announced has happened, and the
+    observation now carries the real counts."""
     ew = host_gb.get("wire_ewma")
     if ew is None:
         return None
@@ -325,4 +590,33 @@ def update_profile(host_gb: dict, pair_slots: np.ndarray, rounds: int,
     out = (decay * np.asarray(ew, np.float64)
            + (1.0 - decay) * obs).astype(np.float32)
     host_gb["wire_ewma"] = out
+    if host_gb.get("announce_ewma") is not None:
+        host_gb["announce_ewma"] = np.zeros_like(out)
+    return out
+
+
+def update_changed_profile(host_gb: dict, count_hist,
+                           decay: float = PROFILE_DECAY) -> Optional[np.ndarray]:
+    """Fold one run's per-superstep changed-slot histogram into the block's
+    ``changed_ewma`` (in place):
+
+        ewma' = decay * ewma + (1 - decay) * count_hist (zero-extended)
+
+    ``count_hist`` is ``Telemetry.count_hist`` — the Σ of packed per-pair
+    counts each exchange round shipped (the frontier width in mailbox
+    slots; compact, tiered and phased runs all record it). Observations are
+    ZERO-extended past the run's realized supersteps: a run that converged
+    early is evidence the tail is quiet, exactly what the phase boundaries
+    and the announce-floor horizon should learn. Entries past
+    ``PHASE_HIST_LEN`` are truncated (a run that long pins its tail phase
+    anyway). A block with no ``changed_ewma`` is left untouched."""
+    ch = host_gb.get("changed_ewma")
+    if ch is None or count_hist is None:
+        return None
+    obs = np.zeros(PHASE_HIST_LEN, np.float64)
+    hist = np.asarray(count_hist, np.float64).reshape(-1)[:PHASE_HIST_LEN]
+    obs[:hist.size] = hist
+    out = (decay * np.asarray(ch, np.float64)
+           + (1.0 - decay) * obs).astype(np.float32)
+    host_gb["changed_ewma"] = out
     return out

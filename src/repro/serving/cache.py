@@ -88,6 +88,12 @@ def choose_landmarks(pg: PartitionedGraph, num: int,
     raise ValueError(f"unknown landmark strategy {strategy!r}")
 
 
+# landmark drift: EWMA weight on the LATEST refresh's stale fraction, and
+# the default re-bootstrap threshold (see LandmarkCache.drifted)
+DRIFT_DECAY = 0.5
+DRIFT_THRESHOLD = 0.6
+
+
 @dataclasses.dataclass
 class LandmarkCache:
     """L exact landmark distance vectors for one graph; answers approximate
@@ -96,16 +102,36 @@ class LandmarkCache:
     service no longer flushes the tier: ``stale_landmarks`` proves which
     vectors a delta could have changed (O(L·|delta|) against the cached
     distances) and ``refresh`` recomputes ONLY those, resuming each from its
-    previous fixpoint via the batched dirty-frontier restart."""
+    previous fixpoint via the batched dirty-frontier restart.
+
+    Re-selection drift: the degree-chosen landmarks can stop being hubs
+    after many deltas, and the symptom is cheap to observe — the fraction of
+    vectors each refresh proves stale. ``stale_frac_ewma`` tracks it across
+    versions (EWMA, weight ``DRIFT_DECAY`` on the latest refresh);
+    ``drifted()`` crossing ``DRIFT_THRESHOLD`` tells the service the
+    maintenance path has degraded to near-full recomputes, at which point
+    re-BOOTSTRAPPING (fresh landmark selection on the current degree
+    distribution) is the better spend. The signal rides serving telemetry
+    (GraphQueryService.landmark_telemetry)."""
     landmarks: np.ndarray          # (L,) global vertex ids
     dist: np.ndarray               # (L, n) exact distances from each landmark
     graph_version: int = 0
     queries_answered: int = 0
     refreshed_landmarks: int = 0   # vectors recomputed at the last refresh()
+    strategy: str = "degree"       # selection strategy (re-bootstrap reuses it)
+    stale_frac_ewma: float = 0.0   # EWMA of per-refresh stale fractions
+    refreshes: int = 0             # maintenance refreshes since bootstrap
 
     @property
     def num_landmarks(self) -> int:
         return int(self.landmarks.shape[0])
+
+    def drifted(self, threshold: float = DRIFT_THRESHOLD) -> bool:
+        """True when the refresh path has degraded enough that fresh
+        landmark selection beats maintaining the current set. Needs at
+        least two refreshes of evidence — one removal-heavy delta marks
+        everything stale without implying the LANDMARKS drifted."""
+        return self.refreshes >= 2 and self.stale_frac_ewma > threshold
 
     @staticmethod
     def build(pg: PartitionedGraph, num_landmarks: int = 8,
@@ -124,7 +150,7 @@ class LandmarkCache:
         state, _ = eng.run_queries(extra={"qinit": sssp_query_init(pg, lm)})
         return LandmarkCache(landmarks=lm,
                              dist=gather_query_results(pg, state["x"]),
-                             graph_version=pg.version)
+                             graph_version=pg.version, strategy=strategy)
 
     def stale_landmarks(self, delta, directed: bool = False,
                         removed: Optional[int] = None) -> np.ndarray:
@@ -160,27 +186,48 @@ class LandmarkCache:
 
     def refresh(self, pg: PartitionedGraph, delta_result, delta,
                 directed: bool = False, backend: str = "local", mesh=None,
-                gb=None) -> "LandmarkCache":
+                gb=None, exchange: str = "auto", tier_plan=None,
+                profile_block=None) -> "LandmarkCache":
         """The post-delta maintenance path: keep every landmark vector the
         delta provably couldn't touch, and resume the stale ones from their
         previous fixpoints in one batched dirty-frontier restart
         (algorithms.incremental.incremental_sssp_batched) instead of
         re-running the full bootstrap SSSP. ``gb`` shares the serving
-        fleet's (zero-repack-patched) device graph block."""
+        fleet's (zero-repack-patched) device graph block;
+        ``exchange``/``tier_plan`` route the restart — the service passes
+        its narrow-only single-phase plan here (Gopher Phases), since the
+        refresh is exactly a narrow-frontier resume. ``profile_block``: the
+        graph's HOST block — when given, the restart's wire observation is
+        folded into its traffic + changed profiles, which also CONSUMES the
+        pending announce record (the restart is the run it pre-announced;
+        without the fold, announce records would max-accumulate across
+        versions on a service that only ever refreshes landmarks)."""
         from repro.algorithms.incremental import incremental_sssp_batched
+        from repro.core import update_changed_profile, update_profile
         stale = self.stale_landmarks(
             delta, directed=directed,
             removed=delta_result.stats.get("removed"))
         dist = self.dist.copy()
         if stale.any():
-            fresh, _ = incremental_sssp_batched(
+            fresh, tele = incremental_sssp_batched(
                 pg, self.landmarks[stale], self.dist[stale], delta_result,
-                backend=backend, mesh=mesh, gb=gb)
+                backend=backend, mesh=mesh, gb=gb, exchange=exchange,
+                tier_plan=tier_plan)
             dist[stale] = fresh
+            if profile_block is not None and tele.pair_slots is not None:
+                update_profile(profile_block, tele.pair_slots,
+                               tele.pair_rounds)
+                update_changed_profile(profile_block, tele.count_hist)
+        frac = float(stale.sum()) / max(self.num_landmarks, 1)
+        ewma = ((1.0 - DRIFT_DECAY) * self.stale_frac_ewma
+                + DRIFT_DECAY * frac)
         return LandmarkCache(landmarks=self.landmarks, dist=dist,
                              graph_version=pg.version,
                              queries_answered=self.queries_answered,
-                             refreshed_landmarks=int(stale.sum()))
+                             refreshed_landmarks=int(stale.sum()),
+                             strategy=self.strategy,
+                             stale_frac_ewma=ewma,
+                             refreshes=self.refreshes + 1)
 
     def approx_sssp(self, source: int) -> np.ndarray:
         """(n,) UPPER bounds on d(source, ·): min over landmarks of the

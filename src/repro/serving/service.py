@@ -27,8 +27,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import (GopherEngine, TierPlan, device_block,
-                        host_graph_block, update_profile)
+from repro.core import (GopherEngine, PhasedTierPlan, device_block,
+                        host_graph_block, update_changed_profile,
+                        update_profile)
 from repro.gofs.formats import PartitionedGraph
 from repro.serving import planner as pl
 from repro.serving.batched import (BatchedPersonalizedPageRank,
@@ -63,6 +64,7 @@ class ServiceStats:
     rejected: int = 0
     batches: int = 0
     engine_supersteps: int = 0
+    landmark_rebootstraps: int = 0   # drift-triggered full re-selections
     busy_seconds: float = 0.0
     # bounded windows: long-running services must not grow without limit
     lane_fill: deque = dataclasses.field(
@@ -104,7 +106,7 @@ class GraphQueryService:
         self.landmark_caches: Dict[str, LandmarkCache] = {}
         self._gb: Dict[str, dict] = {}       # device graph blocks
         self._host_gb: Dict[str, dict] = {}  # patchable host twins (temporal)
-        self._tier_plans: Dict[str, TierPlan] = {}  # Gopher Mesh plans
+        self._tier_plans: Dict[str, PhasedTierPlan] = {}  # Gopher Phases plans
         self._engines: Dict[tuple, GopherEngine] = {}
         self._pending: List[Request] = []
         self._next_ticket = 0
@@ -150,11 +152,20 @@ class GraphQueryService:
           - with ``rebuild_landmarks=True`` the landmark tier is MAINTAINED,
             not rebuilt: vectors the delta provably couldn't change stay
             valid (LandmarkCache.stale_landmarks), the rest resume from
-            their previous fixpoints via the batched dirty-frontier restart.
+            their previous fixpoints via the batched dirty-frontier restart
+            — on a phased-exchange service that restart rides the
+            NARROW-only single-phase plan (the refresh is exactly a
+            narrow-frontier resume). When the cache's stale-refresh
+            fraction EWMA crosses the drift threshold
+            (LandmarkCache.drifted — the degree-chosen landmarks stopped
+            being hubs), the tier is RE-BOOTSTRAPPED with fresh landmark
+            selection instead, and ``stats.landmark_rebootstraps`` counts
+            it.
 
         Returns the DeltaResult so callers can chain incremental analytics
         off the dirty seeds."""
         from repro.gofs.temporal import apply_delta as _apply
+        from repro.serving.cache import LandmarkCache
         old_lc = self.landmark_caches.get(name)
         host_gb = self._host_gb.get(name)
         if host_gb is None:
@@ -165,10 +176,38 @@ class GraphQueryService:
         self._host_gb[name] = res.block
         self._gb[name] = device_block(res.block)
         if rebuild_landmarks and old_lc is not None:
-            self.landmark_caches[name] = old_lc.refresh(
-                res.pg, res, delta, directed=directed, backend=self.backend,
-                mesh=self.mesh, gb=self._gb[name])
+            if old_lc.drifted():
+                self.landmark_caches[name] = LandmarkCache.build(
+                    res.pg, num_landmarks=old_lc.num_landmarks,
+                    strategy=old_lc.strategy, backend=self.backend,
+                    mesh=self.mesh)
+                self.stats.landmark_rebootstraps += 1
+            else:
+                exchange, plan = "auto", None
+                if self._exchange_mode() == "phased":
+                    exchange = "phased"
+                    plan = PhasedTierPlan.narrow_resume(res.block)
+                self.landmark_caches[name] = old_lc.refresh(
+                    res.pg, res, delta, directed=directed,
+                    backend=self.backend, mesh=self.mesh,
+                    gb=self._gb[name], exchange=exchange, tier_plan=plan,
+                    profile_block=res.block)
         return res
+
+    def landmark_telemetry(self, name: str) -> Optional[dict]:
+        """The landmark tier's drift signal for one graph: per-version
+        stale-refresh fraction EWMA, refresh count, and whether the next
+        maintained delta would trigger a re-bootstrap."""
+        lc = self.landmark_caches.get(name)
+        if lc is None:
+            return None
+        return dict(num_landmarks=lc.num_landmarks,
+                    graph_version=lc.graph_version,
+                    refreshed_landmarks=lc.refreshed_landmarks,
+                    refreshes=lc.refreshes,
+                    stale_frac_ewma=round(lc.stale_frac_ewma, 4),
+                    drifted=lc.drifted(),
+                    rebootstraps=self.stats.landmark_rebootstraps)
 
     # ---------------- request intake ----------------
     def submit(self, kind: str, graph: str, sources) -> int:
@@ -256,17 +295,23 @@ class GraphQueryService:
         self.stats.batches += 1
         self.stats.engine_supersteps += tele.supersteps
         self.stats.lane_fill.append(batch.fill)
-        # Gopher Mesh feedback: fold this batch's per-pair wire observation
-        # into the graph's traffic profile (the next plan rebuild tightens
-        # the tiers), and propagate any overflow escalation the engine
-        # applied so freshly pooled engines start from the promoted plan
+        # Gopher Mesh/Phases feedback: fold this batch's per-pair wire
+        # observation into the graph's traffic profile and its frontier
+        # histogram into the changed-histogram EWMA (the next plan rebuild
+        # tightens both the tiers and the phase boundaries), and propagate
+        # any overflow escalation the engine applied so freshly pooled
+        # engines start from the promoted plan
         if tele.pair_slots is not None and batch.graph in self._host_gb:
             update_profile(self._host_gb[batch.graph], tele.pair_slots,
                            tele.pair_rounds)
+        if tele.count_hist is not None and batch.graph in self._host_gb:
+            update_changed_profile(self._host_gb[batch.graph],
+                                   tele.count_hist)
         if tele.escalations:
             self._tier_plans[batch.graph] = eng.tier_plan
             for key, other in self._engines.items():
-                if key[0] == batch.graph and other.exchange == "tiered":
+                if (key[0] == batch.graph
+                        and other.exchange in ("tiered", "phased")):
                     other.tier_plan = eng.tier_plan
         return results[:len(batch.queries)], tele.query_supersteps
 
@@ -280,19 +325,34 @@ class GraphQueryService:
             self._gb[graph] = device_block(host)
         return self._gb[graph]
 
-    def _tier_plan(self, graph: str) -> Optional[TierPlan]:
-        """The graph's current Gopher Mesh plan (shard_map backend only):
-        built from the host block's traffic profile, cached until a version
-        bump or an escalation replaces it. Engines on the local backend
-        resolve exchange='auto' to the dense path and take no plan."""
-        if self.backend != "shard_map":
+    def _exchange_mode(self) -> str:
+        """The exchange discipline pooled engines run: 'phased' (Gopher
+        Phases) on a real multi-device shard_map mesh — the per-graph plans
+        ride the host blocks' traffic + changed-histogram profiles — and
+        'auto' everywhere else (which resolves to dense on 'local' and on a
+        degenerate 1-device mesh, where compaction is pure overhead)."""
+        if self.backend != "shard_map" or self.mesh is None:
+            return "auto"
+        # the size of the engines' PARTITION axis, not the whole mesh — the
+        # same basis GopherEngine's auto resolution uses, so the service
+        # never forces phased plans onto a single-chip partition axis
+        D = int(dict(self.mesh.shape).get("parts", 1))
+        return "phased" if D > 1 else "auto"
+
+    def _tier_plan(self, graph: str) -> Optional[PhasedTierPlan]:
+        """The graph's current Gopher Phases plan (multi-device shard_map
+        only): built from the host block's traffic + changed-histogram
+        profiles, cached until a version bump or an escalation replaces
+        it. Engines on the local backend (or a 1-device mesh) resolve
+        exchange='auto' to the dense path and take no plan."""
+        if self._exchange_mode() != "phased":
             return None
         if graph not in self._tier_plans:
             host = self._host_gb.get(graph)
             if host is None:
                 self._graph_block(graph)          # builds the host twin
                 host = self._host_gb[graph]
-            self._tier_plans[graph] = TierPlan.from_block(host)
+            self._tier_plans[graph] = PhasedTierPlan.from_block(host)
         return self._tier_plans[graph]
 
     def _engine(self, graph: str, family: str, Q: int) -> GopherEngine:
@@ -311,6 +371,7 @@ class GraphQueryService:
             self._engines[key] = GopherEngine(
                 pg, prog, backend=self.backend, mesh=self.mesh,
                 max_supersteps=max_ss, gb=self._graph_block(graph),
+                exchange=self._exchange_mode(),
                 tier_plan=self._tier_plan(graph))
         return self._engines[key]
 

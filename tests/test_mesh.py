@@ -304,8 +304,11 @@ def test_auto_resolves_per_backend(road):
     local = GopherEngine(pg, prog)
     assert local.exchange_requested == "auto"
     assert local.exchange == "dense" and local.tier_plan is None
+    # a DEGENERATE 1-device shard_map mesh is local in every physical sense
+    # — every partition shares one chip, the "wire" is a transpose — so
+    # auto picks dense there too (the tier plan overhead buys nothing)
     sm = GopherEngine(pg, prog, backend="shard_map", mesh=_mesh1())
-    assert sm.exchange == "tiered" and sm.tier_plan is not None
+    assert sm.exchange == "dense" and sm.tier_plan is None
     # auto results match an explicit dense run on both backends
     sd, _ = GopherEngine(pg, prog, exchange="dense").run()
     sa, ta = local.run()
@@ -313,7 +316,12 @@ def test_auto_resolves_per_backend(road):
     assert ta.exchange == "dense"
     sm_state, tm = sm.run()
     assert np.array_equal(np.asarray(sd["x"]), np.asarray(sm_state["x"]))
-    assert tm.exchange == "tiered"
+    assert tm.exchange == "dense"
+    # an EXPLICIT tiered request on the 1-device mesh is still honored
+    st, tt = GopherEngine(pg, prog, backend="shard_map", mesh=_mesh1(),
+                          exchange="tiered").run()
+    assert tt.exchange == "tiered"
+    assert np.array_equal(np.asarray(sd["x"]), np.asarray(st["x"]))
 
 
 # ---------------- overflow: dense fallback retry + escalation ----------------
@@ -374,6 +382,10 @@ from repro.gofs.formats import partition_graph
 g = road_grid(14, 14, drop_frac=0.05, seed=1, weighted=True)
 pg = partition_graph(g, bfs_grow_partition(g, 8, seed=0), 8)   # v=2/device
 mesh = compat.make_mesh((4,), ("parts",))
+# auto picks the tiered wire on a REAL multi-device mesh (vs dense at D=1)
+assert GopherEngine(pg, SemiringProgram(semiring="max_first",
+                                        init_fn=init_max_vertex),
+                    backend="shard_map", mesh=mesh).exchange == "tiered"
 for prog in (SemiringProgram(semiring="max_first", init_fn=init_max_vertex),
              SemiringProgram(semiring="min_plus",
                              init_fn=make_sssp_init(int(pg.part_of[0]),

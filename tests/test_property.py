@@ -173,15 +173,17 @@ def test_mamba2_vs_mamba1_style_recurrence(S, seed):
 @given(st.integers(20, 90), st.floats(1.5, 4.0), st.integers(2, 5),
        st.integers(0, 10_000), st.integers(1, 25), st.integers(0, 12))
 def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
-    """Gopher Wire/Mesh: any random delta batch over any random graph — the
-    compacted, tiered and auto exchanges on the zero-repack-patched block
-    give bit-identical SSSP/CC results to the dense exchange on a
-    cold-packed block of the same graph version (tiered may route through
-    its dense fallback when the delta overflows a tier; the result contract
-    is unconditional)."""
-    from repro.core import (GopherEngine, SemiringProgram, TierPlan,
-                            device_block, host_graph_block, init_max_vertex,
-                            make_sssp_init)
+    """Gopher Wire/Mesh/Phases: any random delta batch over any random graph
+    — the compacted, tiered, auto and PHASED exchanges on the
+    zero-repack-patched block give bit-identical SSSP/CC results to the
+    dense exchange on a cold-packed block of the same graph version (tiered
+    may route through its dense fallback — and phased through its
+    per-superstep dense retry — when the delta overflows a tier; the result
+    contract is unconditional)."""
+    from repro.core import (GopherEngine, PhasedTierPlan, SemiringProgram,
+                            TierPlan, device_block, host_graph_block,
+                            init_max_vertex, make_sssp_init,
+                            update_changed_profile)
     from repro.gofs import EdgeDelta, apply_delta
     rng = np.random.default_rng(seed)
     g = random_graph(n, avg_degree=deg, seed=seed, weighted=True)
@@ -200,8 +202,12 @@ def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
         insert_src=iu[keep], insert_dst=iv[keep],
         insert_wgt=rng.uniform(0.1, 5.0, int(keep.sum())).astype(np.float32),
         remove_src=rs, remove_dst=rd)
-    res = apply_delta(pg0, delta, directed=False,
-                      block=host_graph_block(pg0))
+    hb = host_graph_block(pg0)
+    # teach the changed-histogram EWMA with an arbitrary contraction so the
+    # phased mode exercises real multi-phase segmentation, not just the
+    # single-phase degenerate case
+    update_changed_profile(hb, [8 * n, n, max(n // 8, 1), 0])
+    res = apply_delta(pg0, delta, directed=False, block=hb)
     pg1 = res.pg
     cold = host_graph_block(pg1)
     gb_patched = device_block(res.block)
@@ -211,9 +217,10 @@ def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
         prog = SemiringProgram(semiring=sr, init_fn=init)
         s_ref, _ = GopherEngine(pg1, prog, gb=device_block(cold),
                                 exchange="dense").run()
-        for mode in ("compact", "tiered", "auto"):
+        for mode in ("compact", "tiered", "auto", "phased"):
             plan = (TierPlan.from_block(res.block) if mode == "tiered"
-                    else None)
+                    else PhasedTierPlan.from_block(res.block)
+                    if mode == "phased" else None)
             s_new, _ = GopherEngine(pg1, prog, gb=gb_patched, exchange=mode,
                                     tier_plan=plan).run()
             assert np.array_equal(np.asarray(s_ref["x"]),
