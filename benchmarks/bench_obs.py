@@ -1,0 +1,83 @@
+"""Gopher Scope smoke gates (CI runs this file on main).
+
+Three acceptance checks on tiny CC + SSSP workloads:
+
+  1. TRACED runs produce a schema-valid Chrome trace (nested run -> phase ->
+     superstep -> stage spans, balanced) and a schema-valid metrics
+     snapshot — and their results are BIT-IDENTICAL to the untraced
+     compiled-loop runs.
+  2. DISABLED tracing is free: min-of-N wall clock of a run holding a
+     disabled Tracer stays within 2% of the plain run (same compiled
+     loop via the shared runner cache — the only delta is the
+     ``tracer.enabled`` check, so anything past noise is a regression).
+  3. The artifacts land: BENCH_obs.json rows + the BENCH_obs_metrics.json
+     registry snapshot write_bench_json emits for every suite.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import (GopherEngine, SemiringProgram, init_max_vertex,
+                        make_sssp_init)
+from repro.gofs import bfs_grow_partition, road_grid
+from repro.gofs.formats import partition_graph
+from repro.obs import (Tracer, metrics, validate_chrome_trace,
+                       validate_metrics)
+
+OVERHEAD_FRAC = 0.02     # disabled tracing must cost < 2%
+TIMED_REPEATS = 20       # min-of-N absorbs scheduler noise
+
+
+def _programs(pg):
+    return {
+        "cc": SemiringProgram(semiring="max_first", init_fn=init_max_vertex),
+        "sssp": SemiringProgram(
+            semiring="min_plus",
+            init_fn=make_sssp_init(int(pg.part_of[0]), int(pg.local_of[0]))),
+    }
+
+
+def run():
+    g = road_grid(24, 24, seed=1)
+    pg = partition_graph(g, bfs_grow_partition(g, 4, seed=0), 4)
+
+    for algo, prog in _programs(pg).items():
+        # -------- gate 1: traced run, valid artifacts, identical results --
+        plain = GopherEngine(pg, prog)
+        state_p, tele_p = plain.run()
+        tracer = Tracer(enabled=True)
+        traced = GopherEngine(pg, prog, tracer=tracer)
+        state_t, tele_t = traced.run()
+        np.testing.assert_array_equal(np.asarray(state_p["x"]),
+                                      np.asarray(state_t["x"]))
+        assert tele_t.supersteps == tele_p.supersteps
+        assert tele_t.wire_slots == tele_p.wire_slots
+        assert tracer.balanced, f"open spans: {tracer.open_spans()}"
+        trace = tracer.chrome_trace()
+        validate_chrome_trace(trace)
+        names = {ev["name"] for ev in trace["traceEvents"]}
+        assert {"run", "phase", "superstep", "sweep", "pack", "exchange",
+                "halt-vote"} <= names, f"missing stage spans: {names}"
+        validate_metrics(metrics.default_registry().snapshot())
+        emit(f"obs_traced_{algo}", 0.0,
+             f"spans={len(trace['traceEvents'])};"
+             f"supersteps={tele_t.supersteps}")
+
+        # -------- gate 2: disabled tracing is free ------------------------
+        off = GopherEngine(pg, prog, tracer=Tracer(enabled=False))
+        _, t_plain = timed(plain.run, repeats=TIMED_REPEATS, warmup=True)
+        _, t_off = timed(off.run, repeats=TIMED_REPEATS, warmup=True)
+        overhead = t_off / t_plain - 1.0
+        emit(f"obs_disabled_overhead_{algo}", t_off,
+             f"plain_us={t_plain * 1e6:.0f};overhead={overhead * 100:.2f}%")
+        assert overhead < OVERHEAD_FRAC, \
+            f"disabled tracing costs {overhead * 100:.2f}% (> " \
+            f"{OVERHEAD_FRAC * 100:.0f}%) on {algo}"
+
+
+if __name__ == "__main__":
+    from benchmarks.common import write_bench_json
+    run()
+    import sys
+    print(f"# wrote {write_bench_json('obs')}", file=sys.stderr)

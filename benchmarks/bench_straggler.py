@@ -3,7 +3,10 @@ for PageRank-like sweeps, plus the paper's §7 proposed fix (sub-graph-balanced
 partitioning) and the beyond-paper bounded-local-iters mitigation.
 
 On the SPMD engine the straggler signal is the per-partition cumulative
-local-sweep iteration count (tele.local_iters) and the sub-graph size skew."""
+local-sweep iteration count (tele.local_iters) and the sub-graph size skew;
+the scoring now lives in repro.obs.skew (Gopher Scope), so this bench, the
+engine metrics and the serving stats all rank stragglers with the SAME
+imbalance score."""
 from __future__ import annotations
 
 import numpy as np
@@ -11,6 +14,8 @@ import numpy as np
 from benchmarks.common import NUM_PARTS, emit, get_pg, timed
 from repro.algorithms import connected_components
 from repro.core.subgraph import subgraph_sizes
+from repro.gofs.formats import partition_graph
+from repro.obs.skew import imbalance_score, skew_report
 
 
 def run():
@@ -22,17 +27,37 @@ def run():
             biggest = np.array([s.max() if len(s) else 0 for s in sizes])
             (labels, ncc, tele), dt = timed(
                 lambda: connected_components(pg, mode="subgraph"))
-            li = tele.local_iters.astype(float)
-            skew = float(li.max() / max(li.mean(), 1e-9))
+            rep = skew_report(tele)
+            skew = rep["imbalance"]
             emit(f"fig5_straggler_{ds}_{part}", dt,
-                 f"iter_skew={skew:.2f};max_sg={int(biggest.max())};"
-                 f"supersteps={tele.supersteps}")
+                 f"iter_skew={skew:.2f};cv={rep['cv']:.2f};"
+                 f"straggler=p{rep['straggler']};"
+                 f"max_sg={int(biggest.max())};supersteps={tele.supersteps}")
             rows.append((ds, part, skew, int(biggest.max())))
     # the balanced partitioner must not make the biggest sub-graph worse
     by = {(d, p): (s, b) for d, p, s, b in rows}
     for ds in ("TR", "LJ"):
         assert by[(ds, "balanced")][1] <= max(by[(ds, "hash")][1],
                                               by[(ds, "bfs")][1])
+    # Gopher Scope gate: the shared imbalance score must RANK a degenerate
+    # one-giant-partition split above the balanced partitioner on the same
+    # graph + algorithm — the ordering Gopher Balance's migration policy
+    # will trust
+    g, pg_bal = get_pg("RN", "balanced")
+    assign = np.zeros(g.n, np.int64)
+    assign[:NUM_PARTS - 1] = np.arange(1, NUM_PARTS)   # 7 singletons + 1 giant
+    pg_skew = partition_graph(g, assign, NUM_PARTS)
+    (_, _, tele_s), _ = timed(
+        lambda: connected_components(pg_skew, mode="subgraph"))
+    (_, _, tele_b), _ = timed(
+        lambda: connected_components(pg_bal, mode="subgraph"))
+    s_skew = imbalance_score(tele_s.local_iters)
+    s_bal = imbalance_score(tele_b.local_iters)
+    emit("fig5_imbalance_rank_RN", 0.0,
+         f"skewed={s_skew:.2f};balanced={s_bal:.2f}")
+    assert s_skew > s_bal, \
+        f"imbalance score failed to rank skewed ({s_skew}) above " \
+        f"balanced ({s_bal})"
     return rows
 
 

@@ -52,11 +52,16 @@ def emit(name: str, seconds: float, derived: str = ""):
 def write_bench_json(suite: str, payload=None) -> str:
     """Write BENCH_<suite>.json at the repo root (the perf-trajectory record
     the roadmap tracks). ``payload`` defaults to the rows emit() collected
-    since process start."""
+    since process start. A Gopher Scope metrics snapshot of everything the
+    run fed the default registry (engine counters, tier-plan builds, profile
+    drift, serving latencies) rides along as BENCH_<suite>_metrics.json."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     path = os.path.join(root, f"BENCH_{suite}.json")
     with open(path, "w") as f:
         json.dump(payload if payload is not None else RESULTS, f, indent=1)
+    from repro.obs import metrics as obs_metrics
+    obs_metrics.default_registry().write_json(
+        os.path.join(root, f"BENCH_{suite}_metrics.json"))
     return path
 
 

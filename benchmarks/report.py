@@ -1,8 +1,49 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSON."""
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSON, plus
+the Gopher Scope artifacts BENCH runs emit: BENCH_*_metrics.json registry
+snapshots (metrics_table) and scope_trace.json Chrome traces (trace_table).
+
+    python benchmarks/report.py BENCH_comm_metrics.json   # metrics table
+    python benchmarks/report.py scope_trace.json          # span summary
+    python benchmarks/report.py dryrun_final.json         # legacy tables
+"""
 from __future__ import annotations
 
 import json
 import sys
+from collections import defaultdict
+
+
+def metrics_table(path: str) -> str:
+    """Markdown table of a gopher-metrics-v1 snapshot."""
+    snap = json.load(open(path))
+    assert snap.get("format") == "gopher-metrics-v1", \
+        f"{path} is not a metrics snapshot"
+    out = ["| metric | kind | value |", "|---|---|---:|"]
+    for k, v in snap.get("counters", {}).items():
+        out.append(f"| `{k}` | counter | {v:g} |")
+    for k, v in snap.get("gauges", {}).items():
+        out.append(f"| `{k}` | gauge | {v:g} |")
+    for k, h in snap.get("histograms", {}).items():
+        out.append(f"| `{k}` | histogram | n={h['count']} mean={h['mean']:.4g}"
+                   f" p50={h['p50']:.4g} p95={h['p95']:.4g}"
+                   f" p99={h['p99']:.4g} |")
+    return "\n".join(out)
+
+
+def trace_table(path: str) -> str:
+    """Per-span-name rollup of a Gopher Scope Chrome trace: count, total and
+    mean wall-clock — the aggregate view of the Perfetto file."""
+    obj = json.load(open(path))
+    agg = defaultdict(lambda: [0, 0.0])
+    for ev in obj.get("traceEvents", []):
+        if ev.get("ph") == "X":
+            agg[ev["name"]][0] += 1
+            agg[ev["name"]][1] += float(ev["dur"])
+    out = ["| span | count | total (ms) | mean (ms) |", "|---|---:|---:|---:|"]
+    for name, (n, tot_us) in sorted(agg.items(), key=lambda kv: -kv[1][1]):
+        out.append(f"| {name} | {n} | {tot_us / 1e3:.3f} "
+                   f"| {tot_us / 1e3 / n:.3f} |")
+    return "\n".join(out)
 
 
 def roofline_table(path: str, mesh: str) -> str:
@@ -54,9 +95,17 @@ def dryrun_table(path: str) -> str:
 
 if __name__ == "__main__":
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_final.json"
-    print("## Dry-run matrix\n")
-    print(dryrun_table(path))
-    print("\n## Roofline (single-pod 16x16)\n")
-    print(roofline_table(path, "16x16"))
-    print("\n## Roofline (multi-pod 2x16x16)\n")
-    print(roofline_table(path, "2x16x16"))
+    head = json.load(open(path))
+    if isinstance(head, dict) and head.get("format") == "gopher-metrics-v1":
+        print(f"## Metrics — {path}\n")
+        print(metrics_table(path))
+    elif isinstance(head, dict) and "traceEvents" in head:
+        print(f"## Trace spans — {path}\n")
+        print(trace_table(path))
+    else:
+        print("## Dry-run matrix\n")
+        print(dryrun_table(path))
+        print("\n## Roofline (single-pod 16x16)\n")
+        print(roofline_table(path, "16x16"))
+        print("\n## Roofline (multi-pod 2x16x16)\n")
+        print(roofline_table(path, "2x16x16"))

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
     serving_* batched multi-query serving QPS vs sequential (Gopher Serve)
     incremental_* delta restart vs full recompute (Gopher Delta)
     comm_*    exchange volume, compact vs dense mailbox (Gopher Wire)
+    obs_*     tracing artifacts valid + disabled-tracing overhead (Gopher
+              Scope)
 
 Every emitted row is also recorded to BENCH_paper_suite.json at the repo
 root (plus BENCH_incremental.json / BENCH_comm.json from the incremental
@@ -32,8 +34,8 @@ def _blockrank():
 
 def main() -> None:
     from benchmarks import (bench_comm, bench_goffish_vs_vertex,
-                            bench_incremental, bench_loading, bench_serving,
-                            bench_straggler, bench_supersteps)
+                            bench_incremental, bench_loading, bench_obs,
+                            bench_serving, bench_straggler, bench_supersteps)
     from benchmarks.common import write_bench_json
     print("name,us_per_call,derived")
     bench_goffish_vs_vertex.run()
@@ -44,6 +46,7 @@ def main() -> None:
     bench_serving.run()
     bench_incremental.run()
     bench_comm.run()
+    bench_obs.run()
     print(f"# wrote {write_bench_json('paper_suite')}", file=sys.stderr)
 
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.gofs.formats import PAD, PartitionedGraph, grow_last_axis
+from repro.obs import metrics as obs_metrics
 
 _GB_FIELDS = ["nbr", "wgt", "vmask", "out_degree", "global_id", "sg_id",
               "re_src", "re_wgt", "re_dst_part", "re_dst_local", "re_slot"]
@@ -407,4 +408,11 @@ def patch_host_block(gb: dict, new_pg: PartitionedGraph,
     else:
         assert new_pg.mailbox_cap == gb["ob_inv"].shape[1] // P, \
             "mailbox cap changed without remote-edge events"
+    reg = obs_metrics.default_registry()
+    reg.counter("blocks_patches_total").inc()
+    reg.counter("blocks_rows_rebinned_total").inc(len(touched_rows))
+    reg.counter("blocks_remote_slots_freed_total").inc(
+        len(rdel) if rdel else 0)
+    reg.counter("blocks_remote_slots_spliced_total").inc(
+        len(radd) if radd else 0)
     return out

@@ -53,6 +53,9 @@ from repro.core.blocks import graph_block  # noqa: F401 (re-exported API)
 from repro.core.tiers import DEMOTE_STREAK, PhasedTierPlan, TierPlan
 from repro.gofs.formats import PartitionedGraph
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import skew as obs_skew
+from repro.obs import trace as obs_trace
 
 # the vmapped partition axis gets a collective name so programs can take
 # GLOBAL reductions (PageRank dangling mass / L1 halt) with a plain psum —
@@ -94,10 +97,12 @@ class Telemetry:
     #             count-prefixed transport would ship. The compact mode's
     #             PHYSICAL buffers keep the dense geometry plus a slot map
     #             (that gap is exactly what the tiered mode closes).
-    # wire_hist[s] covers the exchange that ran at the END of superstep s;
-    # the pre-loop inbox prime is accounted in wire_slots but has no
-    # superstep to land in.
-    wire_hist: Optional[np.ndarray] = None     # (supersteps,) int
+    # Histograms are ROUND-indexed (length supersteps + 1): round 0 is the
+    # pre-loop inbox PRIME (the initial state's messages) and round s + 1 is
+    # the exchange at the END of superstep s — so wire_hist.sum() equals
+    # wire_slots with no unaccounted round (the prime used to be counted in
+    # wire_slots only, leaving the per-round histograms one short).
+    wire_hist: Optional[np.ndarray] = None     # (supersteps + 1,) int
     wire_slots: int = 0                        # total slots shipped (incl. prime)
     bytes_on_wire: int = 0                     # wire bytes under the same model
     # Gopher Mesh: per-pair packed-count totals (the traffic profile's
@@ -112,13 +117,15 @@ class Telemetry:
     spills: int = 0                            # Σ pair_overflow (tier misses)
     escalations: int = 0                       # pairs promoted after spills
     retried: bool = False                      # dense fallback retry ran
-    # Gopher Phases (phased runs; count_hist also on compact/tiered):
-    count_hist: Optional[np.ndarray] = None    # (supersteps,) Σ packed counts
-                                               # per round — the frontier
-                                               # width (feed to
+    # Gopher Phases (phased runs; count_hist also on compact/tiered —
+    # 'dense' measures no packed counts, so its count_hist stays None):
+    count_hist: Optional[np.ndarray] = None    # (supersteps + 1,) Σ packed
+                                               # counts per round — the
+                                               # frontier width (feed to
                                                # tiers.update_changed_profile)
-    phase_hist: Optional[np.ndarray] = None    # (supersteps,) phase index of
-                                               # each superstep's exchange
+    phase_hist: Optional[np.ndarray] = None    # (supersteps + 1,) phase index
+                                               # of each round's exchange
+                                               # (round 0 = prime, phase 0)
     phase_switch_steps: Optional[np.ndarray] = None  # supersteps at which the
                                                # run crossed into a new phase
     phase_wire: Optional[np.ndarray] = None    # (K,) routed slots per phase
@@ -142,6 +149,12 @@ class Telemetry:
             return rounds * num_parts * num_parts * cap * q * 4
         return slots * (4 * q + 4) + rounds * num_parts * num_parts * 4
 
+    def skew(self) -> dict:
+        """Gopher Scope: the run's partition-imbalance report (straggler
+        score off local_iters, wire skew off pair_slots) — see
+        repro.obs.skew.skew_report."""
+        return obs_skew.skew_report(self)
+
 
 class GopherEngine:
     """Runs a program over a PartitionedGraph to global quiescence."""
@@ -149,7 +162,9 @@ class GopherEngine:
     def __init__(self, pg: PartitionedGraph, program, backend: str = "local",
                  mesh=None, axis_name: str = "parts",
                  max_supersteps: int = 4096, gb: Optional[dict] = None,
-                 exchange: str = "auto", tier_plan: Optional[TierPlan] = None):
+                 exchange: str = "auto", tier_plan: Optional[TierPlan] = None,
+                 tracer: Optional["obs_trace.Tracer"] = None,
+                 metrics: Optional["obs_metrics.MetricsRegistry"] = None):
         assert backend in ("local", "shard_map")
         assert exchange in ("auto", "compact", "dense", "tiered", "phased")
         if backend == "shard_map":
@@ -199,6 +214,23 @@ class GopherEngine:
         self._gb = gb                # cached device-side graph block; pass a
                                      # shared one so many engines (a serving
                                      # fleet) reuse a single device copy
+        # Gopher Scope: host-side observability. None defers to the process
+        # defaults at run time (so launch/scope can arm a tracer AFTER
+        # engines were built). A disabled tracer keeps the compiled fused
+        # loop untouched — the traced stepped driver only replaces it when
+        # the tracer is enabled.
+        self._tracer = tracer
+        self._metrics = metrics
+
+    @property
+    def tracer(self) -> "obs_trace.Tracer":
+        return (self._tracer if self._tracer is not None
+                else obs_trace.get_tracer())
+
+    @property
+    def metrics(self) -> "obs_metrics.MetricsRegistry":
+        return (self._metrics if self._metrics is not None
+                else obs_metrics.default_registry())
 
     def _graph_block(self):
         """The device graph block, built once per engine — every query batch
@@ -299,6 +331,35 @@ class GopherEngine:
         Telemetry.pair_slots / pair_overflow — the observations
         core.tiers.update_profile folds into the traffic profile.
         """
+        pack, route = self.make_exchange_stages(gb, num_queries=num_queries,
+                                                phase=phase)
+
+        def exchange(state):
+            payload, nsent, wire, extras = pack(state)
+            inbox, rex = route(payload)
+            if rex:
+                wire = rex.get("wire", wire)
+                extras = dict(extras, **{k: v for k, v in rex.items()
+                                         if k != "wire"})
+            return inbox, nsent, wire, extras
+
+        return exchange
+
+    def make_exchange_stages(self, gb, num_queries: Optional[int] = None,
+                             phase: Optional[int] = None):
+        """The exchange split at its NETWORK BOUNDARY into two closures —
+        ``pack(state) -> (payload, nsent, wire, extras)`` (pure device-local
+        message build / frontier compaction; payload is the pytree that
+        would cross the wire) and ``route(payload) -> (inbox, route_extras)``
+        (the collective transpose plus inbox combine). ``make_exchange``
+        composes them, so the compiled fused loop's math is exactly the
+        per-stage math; Gopher Scope's traced stepped driver dispatches the
+        stages individually to clock pack vs. exchange wall-clock.
+
+        ``route_extras`` is {} except on 'phased', where the per-superstep
+        dense-retry decision lives on the route side: {'wire': the corrected
+        shipped-slot count, 'dstep': the 0/1 retry flag}.
+        """
         prog = self.program
         cap = self.pg.mailbox_cap
         v_max = self.pg.v_max
@@ -321,36 +382,56 @@ class GopherEngine:
             limits_np = plan.limits()
             axis = self.axis_name if self.backend == "shard_map" else None
 
-        def route(x):
+        def phys(x):
             if self.backend == "local":
                 return msg.route_local(x)
             return msg.route_shard_map(x, self.axis_name)
 
-        def exchange(state):
+        if Q is None:
+            comb = functools.partial(msg.combine_inbox_gather,
+                                     v_max=v_max, combine=combine)
+        else:
+            comb = functools.partial(msg.combine_inbox_gather_batched,
+                                     v_max=v_max, cap=cap, combine=combine)
+
+        def finish(iv):
+            return jax.vmap(comb)(iv, gb["ib_lo"], gb["ib_hub_idx"],
+                                  gb["ib_hub"])
+
+        def send_messages(state):
             vals, send = jax.vmap(prog.messages)(state, gb)
-            nsent = jnp.sum(send).astype(jnp.int32)
-            if Q is None:
-                comb = functools.partial(msg.combine_inbox_gather,
-                                         v_max=v_max, combine=combine)
-            else:
-                comb = functools.partial(msg.combine_inbox_gather_batched,
-                                         v_max=v_max, cap=cap, combine=combine)
-            extras = {}
-            if mode == "dense":
-                # gather-form dense mailbox: slots PULL through the inverse
-                # routing plan — no runtime scatter, only values travel
-                build = functools.partial(
-                    msg.build_outbox_gather if Q is None
-                    else msg.build_outbox_gather_batched,
-                    num_parts=num_parts, cap=cap, combine=combine)
-                iv = route(jax.vmap(build)(vals, send, gb["ob_inv"]))
+            return vals, send, jnp.sum(send).astype(jnp.int32)
+
+        if mode == "dense":
+            # gather-form dense mailbox: slots PULL through the inverse
+            # routing plan — no runtime scatter, only values travel
+            build = functools.partial(
+                msg.build_outbox_gather if Q is None
+                else msg.build_outbox_gather_batched,
+                num_parts=num_parts, cap=cap, combine=combine)
+
+            def pack(state):
+                vals, send, nsent = send_messages(state)
+                slot_vals = jax.vmap(build)(vals, send, gb["ob_inv"])
                 p_local = gb["vmask"].shape[0]
                 wire = jnp.int32(p_local * num_parts * cap)
-            elif mode == "compact":
-                build = functools.partial(
-                    msg.build_outbox_compact if Q is None
-                    else msg.build_outbox_compact_batched,
-                    num_parts=num_parts, cap=cap, combine=combine)
+                return (slot_vals,), nsent, wire, {}
+
+            def route(payload):
+                (slot_vals,) = payload
+                return finish(phys(slot_vals)), {}
+
+        elif mode == "compact":
+            build = functools.partial(
+                msg.build_outbox_compact if Q is None
+                else msg.build_outbox_compact_batched,
+                num_parts=num_parts, cap=cap, combine=combine)
+            unpack = functools.partial(
+                msg.unpack_slots if Q is None
+                else msg.unpack_slots_batched, combine=combine)
+
+            def pack(state):
+                vals, send, nsent = send_messages(state)
                 pvals, pinv, counts = jax.vmap(build)(vals, send,
                                                       gb["ob_inv"])
                 # count-prefixed exchange: the packed prefixes and their
@@ -359,21 +440,26 @@ class GopherEngine:
                 # PAD entries of pinv mark inactivity, so the header itself
                 # isn't routed — it feeds the wire telemetry and the
                 # piggybacked halt vote)
-                unpack = functools.partial(
-                    msg.unpack_slots if Q is None
-                    else msg.unpack_slots_batched, combine=combine)
-                iv = jax.vmap(unpack)(route(pvals), route(pinv))
                 wire = jnp.sum(counts).astype(jnp.int32)
-                extras = {"pairs": counts}
-            else:  # tiered / phased
-                ident = msg.COMBINE_IDENTITY[combine]
-                build = functools.partial(
-                    msg.build_outbox_gather if Q is None
-                    else msg.build_outbox_gather_batched,
-                    num_parts=num_parts, cap=cap, combine=combine)
+                return (pvals, pinv), nsent, wire, {"pairs": counts}
+
+            def route(payload):
+                pvals, pinv = payload
+                iv = jax.vmap(unpack)(phys(pvals), phys(pinv))
+                return finish(iv), {}
+
+        else:  # tiered / phased
+            ident = msg.COMBINE_IDENTITY[combine]
+            build = functools.partial(
+                msg.build_outbox_gather if Q is None
+                else msg.build_outbox_gather_batched,
+                num_parts=num_parts, cap=cap, combine=combine)
+            Qg = 1 if Q is None else Q
+
+            def pack(state):
+                vals, send, nsent = send_messages(state)
                 slot_vals = jax.vmap(build)(vals, send, gb["ob_inv"])
                 v_local = slot_vals.shape[0]
-                Qg = 1 if Q is None else Q
                 sv4 = slot_vals.reshape(v_local, num_parts, cap, Qg)
                 act = jax.vmap(functools.partial(
                     msg.active_slots, num_parts=num_parts,
@@ -392,6 +478,14 @@ class GopherEngine:
                            else sv4.reshape(R, cap, Qg))
                 pvals, sids, _, counts, over = ops.outbox_pack(
                     sv_rows, act.reshape(R, cap), lim.reshape(R), ident)
+                extras = {"pairs": counts.reshape(v_local, num_parts),
+                          "over": over.reshape(v_local, num_parts)}
+                wire = jnp.int32(sched.device_round_slots())
+                return (sv4, pvals, sids, over), nsent, wire, extras
+
+            def route(payload):
+                sv4, pvals, sids, over = payload
+                v_local = sv4.shape[0]
 
                 def tier_route(sv4):
                     return msg.route_tiered(
@@ -401,9 +495,7 @@ class GopherEngine:
 
                 if mode == "tiered":
                     iv4 = tier_route(sv4)
-                    wire = jnp.int32(sched.device_round_slots())
-                    extras = {"pairs": counts.reshape(v_local, num_parts),
-                              "over": over.reshape(v_local, num_parts)}
+                    rex = {}
                 else:  # phased: per-superstep dense retry on overflow
                     over_any = jnp.any(over > 0).astype(jnp.int32)
                     if axis is not None and D > 1:
@@ -411,24 +503,20 @@ class GopherEngine:
                     retry = over_any > 0
 
                     def dense_route(sv4):
-                        flat = route(sv4.reshape(v_local, num_parts,
-                                                 cap * Qg))
+                        flat = phys(sv4.reshape(v_local, num_parts,
+                                                cap * Qg))
                         return flat.reshape(v_local, num_parts, cap, Qg)
 
                     iv4 = jax.lax.cond(retry, dense_route, tier_route, sv4)
-                    wire = jnp.where(
-                        retry, jnp.int32(v_local * num_parts * cap),
-                        jnp.int32(sched.device_round_slots()))
-                    extras = {"pairs": counts.reshape(v_local, num_parts),
-                              "over": over.reshape(v_local, num_parts),
-                              "dstep": retry.astype(jnp.int32)}
+                    rex = {"wire": jnp.where(
+                               retry, jnp.int32(v_local * num_parts * cap),
+                               jnp.int32(sched.device_round_slots())),
+                           "dstep": retry.astype(jnp.int32)}
                 iv = iv4.reshape(v_local, num_parts,
                                  cap if Q is None else cap * Qg)
-            inbox = jax.vmap(comb)(iv, gb["ib_lo"], gb["ib_hub_idx"],
-                                   gb["ib_hub"])
-            return inbox, nsent, wire, extras
+                return finish(iv), rex
 
-        return exchange
+        return pack, route
 
     def _run_batched(self, gb, num_queries: Optional[int] = None):
         """The full BSP loop over a partition batch. Runs as-is on the local
@@ -450,17 +538,24 @@ class GopherEngine:
         # computes against a consistent inbox (see make_exchange)
         inbox0, nsent0, wire0, ex0 = self.make_exchange(gb,
                                                         num_queries=Q)(state0)
+        cnt0 = (jnp.sum(ex0["pairs"]).astype(jnp.int32)
+                if "pairs" in ex0 else jnp.int32(0))
         if self.backend == "shard_map":
-            s0 = jax.lax.psum(jnp.stack([nsent0, wire0]), self.axis_name)
-            nsent0, wire0 = s0[0], s0[1]
+            s0 = jax.lax.psum(jnp.stack([nsent0, wire0, cnt0]),
+                              self.axis_name)
+            nsent0, wire0, cnt0 = s0[0], s0[1], s0[2]
+        # histograms are ROUND-indexed (see Telemetry): slot 0 carries the
+        # prime, the body writes superstep s's exchange at slot s + 1
         tele0 = dict(liters=jnp.zeros((p_local,), jnp.int32),
                      hist=jnp.zeros((self.max_supersteps,), jnp.int32),
-                     whist=jnp.zeros((self.max_supersteps,), jnp.int32),
+                     whist=jnp.zeros((self.max_supersteps + 1,),
+                                     jnp.int32).at[0].set(wire0),
                      sent=nsent0, wire=wire0)
         if mode in ("compact", "tiered"):
-            # per-superstep Σ packed counts — the frontier-width histogram
+            # per-round Σ packed counts — the frontier-width histogram
             # the changed-profile EWMA (Gopher Phases) learns from
-            tele0["chist"] = jnp.zeros((self.max_supersteps,), jnp.int32)
+            tele0["chist"] = jnp.zeros((self.max_supersteps + 1,),
+                                       jnp.int32).at[0].set(cnt0)
         # per-pair wire telemetry (compact/tiered): rows stay device-local,
         # the out_specs shard them back to the full (P, P) matrices
         for k, v in ex0.items():
@@ -504,11 +599,11 @@ class GopherEngine:
                 any_changed = jnp.any(changed_q > 0)
             new_tele = dict(liters=tele["liters"] + liters,
                             hist=tele["hist"].at[step].set(nchanged),
-                            whist=tele["whist"].at[step].set(wire),
+                            whist=tele["whist"].at[step + 1].set(wire),
                             sent=tele["sent"] + nsent,
                             wire=tele["wire"] + wire)
             if "chist" in tele:
-                new_tele["chist"] = tele["chist"].at[step].set(cnt)
+                new_tele["chist"] = tele["chist"].at[step + 1].set(cnt)
             for k, v in ex.items():
                 new_tele[k] = tele[k] + v
             if Q is not None:
@@ -555,15 +650,20 @@ class GopherEngine:
         state0 = jax.vmap(prog.init)(gb)
         inbox0, nsent0, wire0, ex0 = self.make_exchange(
             gb, num_queries=Q, phase=0)(state0)
+        cnt0 = jnp.sum(ex0["pairs"]).astype(jnp.int32)
         if self.backend == "shard_map":
-            s0 = jax.lax.psum(jnp.stack([nsent0, wire0]), self.axis_name)
-            nsent0, wire0 = s0[0], s0[1]
+            s0 = jax.lax.psum(jnp.stack([nsent0, wire0, cnt0]),
+                              self.axis_name)
+            nsent0, wire0, cnt0 = s0[0], s0[1], s0[2]
+        # round-indexed histograms: the prime lands at slot 0 under phase 0
         tele0 = dict(
             liters=jnp.zeros((p_local,), jnp.int32),
             hist=jnp.zeros((self.max_supersteps,), jnp.int32),
-            whist=jnp.zeros((self.max_supersteps,), jnp.int32),
-            chist=jnp.zeros((self.max_supersteps,), jnp.int32),
-            phist=jnp.zeros((self.max_supersteps,), jnp.int32),
+            whist=jnp.zeros((self.max_supersteps + 1,),
+                            jnp.int32).at[0].set(wire0),
+            chist=jnp.zeros((self.max_supersteps + 1,),
+                            jnp.int32).at[0].set(cnt0),
+            phist=jnp.zeros((self.max_supersteps + 1,), jnp.int32),
             sent=nsent0, wire=wire0,
             # per-pair phase buckets keep the local-parts axis LEADING so
             # the shard_map out_specs reassemble them like every other
@@ -587,7 +687,10 @@ class GopherEngine:
                 _, _, step, done, streak, _ = c
                 go = (~done) & (step < self.max_supersteps)
                 if _k < K - 1:
-                    go &= (step < bounds[_k]) & (streak < DEMOTE_STREAK)
+                    # boundaries are in ROUND units (the changed-profile's
+                    # index space): superstep s ships round s + 1, so the
+                    # segment keeps going while that round is in-band
+                    go &= (step + 1 < bounds[_k]) & (streak < DEMOTE_STREAK)
                 return go
 
             def body(c, _k=k, _nlim=nlim_np, _sstep=sstep):
@@ -634,9 +737,9 @@ class GopherEngine:
                 new_tele = dict(
                     liters=tele["liters"] + liters,
                     hist=tele["hist"].at[step].set(nchanged),
-                    whist=tele["whist"].at[step].set(wire),
-                    chist=tele["chist"].at[step].set(cnt),
-                    phist=tele["phist"].at[step].set(_k),
+                    whist=tele["whist"].at[step + 1].set(wire),
+                    chist=tele["chist"].at[step + 1].set(cnt),
+                    phist=tele["phist"].at[step + 1].set(_k),
                     sent=tele["sent"] + nsent,
                     wire=tele["wire"] + wire,
                     pairs=tele["pairs"].at[:, _k].add(ex["pairs"]),
@@ -671,14 +774,21 @@ class GopherEngine:
         """
         if checkpointer is not None and checkpoint_every > 0:
             assert not extra, "checkpointed runs don't take extra blocks yet"
+            assert not self.tracer.enabled, \
+                "traced runs don't compose with checkpointing yet"
             return self._run_checkpointed(checkpointer, checkpoint_every, resume)
         gb = self._graph_block()
         if extra:
             gb = dict(gb)
             for k, v in extra.items():
                 gb[k] = jnp.asarray(v)
-        state, steps, tele = self._runner(gb_example=gb)(gb)
-        return self._finish(state, steps, tele, gb, num_queries=None)
+        if self.tracer.enabled:
+            state, steps, tele = self._run_traced(gb, num_queries=None)
+        else:
+            state, steps, tele = self._runner(gb_example=gb)(gb)
+        state, t = self._finish(state, steps, tele, gb, num_queries=None)
+        self._record_run_metrics(t)
+        return state, t
 
     def run_queries(self, extra: Optional[dict] = None):
         """Run a query-batched program (``program.num_queries`` = Q) to global
@@ -698,8 +808,14 @@ class GopherEngine:
         gb = dict(self._graph_block())
         for k, v in (extra or {}).items():
             gb[k] = jnp.asarray(v)
-        state, steps, tele = self._runner(num_queries=Q, gb_example=gb)(gb)
-        return self._finish(state, steps, tele, gb, num_queries=Q)
+        if self.tracer.enabled:
+            state, steps, tele = self._run_traced(gb, num_queries=Q)
+        else:
+            state, steps, tele = self._runner(num_queries=Q,
+                                              gb_example=gb)(gb)
+        state, t = self._finish(state, steps, tele, gb, num_queries=Q)
+        self._record_run_metrics(t)
+        return state, t
 
     def _finish(self, state, steps, tele, gb, num_queries):
         """Close out a run: on the tiered exchange, check the overflow
@@ -739,9 +855,10 @@ class GopherEngine:
         self.tier_plan = old.escalate(over > 0)
         tiered_wire = int(tele["wire"])
         tiered_rounds = int(steps) + 1
-        state2, steps2, tele2 = self._runner(num_queries=num_queries,
-                                             gb_example=gb,
-                                             exchange="dense")(gb)
+        with self.tracer.span("dense-retry", spills=spills):
+            state2, steps2, tele2 = self._runner(num_queries=num_queries,
+                                                 gb_example=gb,
+                                                 exchange="dense")(gb)
         t = self._telemetry(steps2, tele2, num_queries=num_queries,
                             exchange="dense")
         t.exchange = "tiered"
@@ -762,6 +879,274 @@ class GopherEngine:
                             * tiered_rounds)
         return jax.tree.map(np.asarray, state2), t
 
+    def _record_run_metrics(self, t: Telemetry) -> None:
+        """Gopher Scope: fold a finished run's telemetry into the metrics
+        registry. Host-side and O(P²) on data the run already pulled to the
+        host — it runs on every run, traced or not (there is nothing to
+        disable: no compiled code is touched)."""
+        m = self.metrics
+        lab = {"exchange": t.exchange or self.exchange,
+               "backend": self.backend}
+        m.counter("engine_runs_total", lab).inc()
+        m.counter("engine_supersteps_total", lab).inc(t.supersteps)
+        m.counter("engine_messages_sent_total", lab).inc(t.messages_sent)
+        m.counter("engine_wire_slots_total", lab).inc(t.wire_slots)
+        m.counter("engine_wire_bytes_total", lab).inc(t.bytes_on_wire)
+        m.counter("engine_spills_total", lab).inc(t.spills)
+        m.counter("engine_escalations_total", lab).inc(t.escalations)
+        if t.retried:
+            m.counter("engine_dense_retries_total", lab).inc()
+        m.counter("engine_dense_retry_steps_total",
+                  lab).inc(t.dense_retry_steps)
+        m.histogram("engine_run_supersteps", lab).observe(t.supersteps)
+        m.gauge("engine_partition_imbalance", lab).set(
+            obs_skew.imbalance_score(t.local_iters))
+
+    # ---------------- Gopher Scope: traced stepped driver ----------------
+    def _traced_stage_fns(self, num_queries: Optional[int],
+                          phase: Optional[int]):
+        """Jitted per-stage functions for ONE phase (or the run's single
+        exchange): init / sweep / pack / route, each taking the graph block
+        as an argument so the jit cache keys on shapes. On shard_map every
+        stage is its own shard_map'd program — replicated scalars (nsent,
+        wire, dstep) are psum'd INSIDE the stage, per-partition arrays come
+        back as global (P, ...) arrays — so the host driver sees exactly the
+        values the fused loop's stats psum would have produced.
+
+        Cached per (num_queries, phase, exchange, tier_plan): repeated
+        traced runs re-enter the same jit entries, and a tier escalation
+        (which changes self.tier_plan) rebuilds the closures."""
+        cache = self.__dict__.setdefault("_traced_cache", {})
+        key = (num_queries, phase, self.exchange, self.tier_plan)
+        fns = cache.get(key)
+        if fns is not None:
+            return fns
+        prog = self.program
+        Q = num_queries
+        axes = ((_VPART_AXIS,) if self.backend == "local"
+                else (_VPART_AXIS, self.axis_name))
+
+        def init_fn(gb):
+            return jax.vmap(prog.init)(gb)
+
+        def sweep_fn(gb, state, inbox, step):
+            return jax.vmap(
+                lambda s, i, g: prog.superstep(s, i, g, step, axes=axes),
+                in_axes=(0, 0, 0), axis_name=_VPART_AXIS)(state, inbox, gb)
+
+        def pack_fn(gb, state):
+            pack, _ = self.make_exchange_stages(gb, num_queries=Q,
+                                                phase=phase)
+            payload, nsent, wire, extras = pack(state)
+            if self.backend == "shard_map":
+                s = jax.lax.psum(jnp.stack([nsent, wire]), self.axis_name)
+                nsent, wire = s[0], s[1]
+            return payload, nsent, wire, extras
+
+        def route_fn(gb, payload):
+            _, route = self.make_exchange_stages(gb, num_queries=Q,
+                                                 phase=phase)
+            inbox, rex = route(payload)
+            if self.backend == "shard_map" and "wire" in rex:
+                rex = dict(rex,
+                           wire=jax.lax.psum(rex["wire"], self.axis_name))
+            return inbox, rex
+
+        if self.backend == "local":
+            fns = dict(init=jax.jit(init_fn), sweep=jax.jit(sweep_fn),
+                       pack=jax.jit(pack_fn), route=jax.jit(route_fn))
+        else:
+            # pytree-prefix specs: parts-sharded unless provably replicated
+            spec, rep = P(self.axis_name), P()
+            fns = dict(
+                init=jax.jit(compat.shard_map(
+                    init_fn, mesh=self.mesh, in_specs=(spec,),
+                    out_specs=spec)),
+                sweep=jax.jit(compat.shard_map(
+                    sweep_fn, mesh=self.mesh,
+                    in_specs=(spec, spec, spec, rep), out_specs=spec)),
+                pack=jax.jit(compat.shard_map(
+                    pack_fn, mesh=self.mesh, in_specs=(spec, spec),
+                    out_specs=(spec, rep, rep, spec))),
+                route=jax.jit(compat.shard_map(
+                    route_fn, mesh=self.mesh, in_specs=(spec, spec),
+                    out_specs=(spec, rep))))
+        cache[key] = fns
+        return fns
+
+    def _run_traced(self, gb, num_queries: Optional[int] = None):
+        """The host-stepped BSP driver behind an ENABLED tracer: the fused
+        compiled while_loop unrolled into per-superstep jitted stage
+        dispatches, so the tracer can clock every
+        run → phase → superstep → {plan, pack, exchange, sweep, halt-vote}
+        span. Semantics are identical to the fused loop — same stage math
+        (the stages ARE make_exchange's halves), same halt rule, same
+        telemetry layout — the halt vote just becomes a host read of the
+        global changed flags, which is the per-superstep sync a trace needs
+        anyway. The disabled path never comes here (see run())."""
+        tr = self.tracer
+        with tr.profile_ctx():
+            with tr.span("run", exchange=self.exchange,
+                         backend=self.backend,
+                         queries=num_queries or 0) as rs:
+                state, steps, tele = self._traced_loop(gb, num_queries)
+                rs.set(supersteps=steps, wire_slots=int(tele["wire"]))
+        return state, steps, tele
+
+    def _traced_loop(self, gb, num_queries: Optional[int]):
+        tr = self.tracer
+        Q = num_queries
+        mode = self.exchange
+        phased = mode == "phased"
+        num_parts = self.pg.num_parts
+        max_s = self.max_supersteps
+        if phased:
+            plan: PhasedTierPlan = self.tier_plan
+            K = plan.num_phases
+            bounds = plan.boundaries
+            nlims = [np.asarray(p.limits())
+                     for p in plan.phase_plans()[1:]] + [None]
+        else:
+            K, bounds, nlims = 1, (None,), [None]
+
+        stages = []
+        for k in range(K):
+            # the plan span charges stage construction + first-dispatch
+            # compile to the phase it belongs to (Gopher Hot's plan-pass
+            # attribution)
+            with tr.span("plan", phase=k, exchange=mode,
+                         backend=self.backend):
+                stages.append(self._traced_stage_fns(
+                    Q, k if phased else None))
+        tr.count("stage_builds", K)
+
+        with tr.span("init"):
+            state = tr.sync(stages[0]["init"](gb))
+
+        # host-side telemetry accumulators in the exact layout the compiled
+        # loop produces, so _finish/_telemetry are shared verbatim
+        liters = np.zeros(num_parts, np.int64)
+        hist = np.zeros(max_s, np.int64)
+        whist = np.zeros(max_s + 1, np.int64)
+        chist = np.zeros(max_s + 1, np.int64)
+        phist = np.zeros(max_s + 1, np.int64)
+        pairs_acc = (np.zeros((num_parts, K, num_parts), np.int64) if phased
+                     else np.zeros((num_parts, num_parts), np.int64))
+        over_acc = np.zeros_like(pairs_acc)
+        seg_end = np.zeros(K, np.int64)
+        qsteps = np.zeros(Q, np.int64) if Q is not None else None
+        sent = wire_total = dsteps = 0
+
+        def fold_pairs(ex, rex, k, rnd):
+            """One round's per-pair telemetry into the host accumulators;
+            returns (wire, Σcounts) as host ints."""
+            nonlocal dsteps, pairs_acc, over_acc
+            wire_i = int(rex["wire"]) if "wire" in rex else None
+            cnt = 0
+            if "pairs" in ex:
+                p = np.asarray(ex["pairs"], np.int64)
+                cnt = int(p.sum())
+                chist[rnd] = cnt
+                if phased:
+                    pairs_acc[:, k] += p
+                else:
+                    pairs_acc += p
+            if "over" in ex:
+                o = np.asarray(ex["over"], np.int64)
+                if phased:
+                    over_acc[:, k] += o
+                else:
+                    over_acc += o
+            if "dstep" in rex:
+                dsteps += int(rex["dstep"])
+            return wire_i, cnt
+
+        with tr.span("prime") as sp:
+            payload, nsent0, wire0, ex0 = stages[0]["pack"](gb, state)
+            inbox, rex = stages[0]["route"](gb, payload)
+            tr.sync(inbox)
+            w, _ = fold_pairs(ex0, rex, 0, 0)
+            wire_i = w if w is not None else int(wire0)
+            sent += int(nsent0)
+            wire_total += wire_i
+            whist[0] = wire_i
+            sp.set(wire=wire_i, nsent=int(nsent0))
+        tr.count("dispatches", 3)
+
+        step = 0
+        done = False
+        for k in range(K):
+            streak = 0
+            with tr.span("phase", index=k,
+                         boundary=(int(bounds[k])
+                                   if phased and k < K - 1 else -1)):
+                while not done and step < max_s:
+                    if phased and k < K - 1 and (
+                            step + 1 >= bounds[k]
+                            or streak >= DEMOTE_STREAK):
+                        break
+                    with tr.span("superstep", step=step) as ss:
+                        with tr.span("sweep"):
+                            state, changed, li = stages[k]["sweep"](
+                                gb, state, inbox, jnp.int32(step))
+                            tr.sync(changed)
+                        with tr.span("pack"):
+                            payload, nsent, wire, ex = stages[k]["pack"](
+                                gb, state)
+                            tr.sync(payload)
+                        with tr.span("exchange"):
+                            inbox, rex = stages[k]["route"](gb, payload)
+                            tr.sync(inbox)
+                        with tr.span("halt-vote"):
+                            # the one host sync a trace needs: read the
+                            # global changed flags and decide on the host
+                            # (the fused loop's psum vote, host-side)
+                            ch = np.asarray(changed)
+                            li_np = np.asarray(li, np.int64)
+                            nsent_i = int(nsent)
+                            w, cnt = fold_pairs(ex, rex, k, step + 1)
+                            wire_i = w if w is not None else int(wire)
+                            if Q is None:
+                                nchanged = int(ch.sum())
+                                any_changed = nchanged > 0
+                            else:
+                                changed_q = ch.any(axis=0)
+                                nchanged = int(ch.any(axis=-1).sum())
+                                any_changed = bool(changed_q.any())
+                                qsteps[changed_q] = step + 1
+                        tr.count("dispatches", 3)
+                        liters += li_np
+                        hist[step] = nchanged
+                        whist[step + 1] = wire_i
+                        sent += nsent_i
+                        wire_total += wire_i
+                        if phased:
+                            phist[step + 1] = k
+                            if nlims[k] is not None:
+                                viol = int((np.asarray(ex["pairs"])
+                                            > nlims[k]).sum())
+                                streak = streak + 1 if viol == 0 else 0
+                        ss.set(changed=nchanged, wire=wire_i,
+                               nsent=nsent_i)
+                        step += 1
+                        done = not any_changed
+            seg_end[k] = step
+
+        tele = dict(liters=liters, hist=hist, whist=whist,
+                    sent=sent, wire=wire_total)
+        if mode in ("compact", "tiered", "phased"):
+            tele["chist"] = chist
+            tele["pairs"] = pairs_acc
+        if mode in ("tiered", "phased"):
+            tele["over"] = over_acc
+        if phased:
+            tele["phist"] = phist
+            tele["seg_end"] = seg_end
+            tele["dsteps"] = dsteps
+        if Q is not None:
+            tele["qsteps"] = qsteps
+        return state, step, tele
+
     def _telemetry(self, steps, tele, num_queries: Optional[int] = None,
                    rounds: Optional[int] = None,
                    exchange: Optional[str] = None) -> Telemetry:
@@ -774,16 +1159,16 @@ class GopherEngine:
              else int(self.mesh.shape[self.axis_name]))
         phased = exchange == "phased" and "phist" in tele
         if phased:
-            # per-superstep geometry varies: charge the routed value slots
-            # per round (wire already totals them, dense-retried rounds at
+            # per-round geometry varies: charge the routed value slots per
+            # round (wire already totals them, dense-retried rounds at
             # dense geometry) plus each phase's index lanes for its rounds
-            # (a slight overcount on retried rounds — dense ships no ids)
+            # (a slight overcount on retried rounds — dense ships no ids).
+            # phist is round-indexed, so the prime (round 0, phase 0) is
+            # already in the bincount.
             K = self.tier_plan.num_phases
-            phist = np.asarray(tele["phist"])[:steps]
+            phist = np.asarray(tele["phist"])[:steps + 1]
             scheds = [p.schedule(D) for p in self.tier_plan.phase_plans()]
-            rounds_k = np.bincount(phist, minlength=K) if steps else \
-                np.zeros(K, np.int64)
-            rounds_k[0] += 1                     # the prime rides phase 0
+            rounds_k = np.bincount(phist, minlength=K)
             q = num_queries or 1
             bytes_on_wire = int(
                 wire * 4 * q
@@ -806,12 +1191,12 @@ class GopherEngine:
             messages_sent=int(tele["sent"]) if np.ndim(tele["sent"]) == 0 else int(np.max(tele["sent"])),
             query_supersteps=(np.asarray(tele["qsteps"])
                               if "qsteps" in tele else None),
-            wire_hist=(np.asarray(tele["whist"])[:steps]
+            wire_hist=(np.asarray(tele["whist"])[:steps + 1]
                        if "whist" in tele else None),
             wire_slots=wire,
             bytes_on_wire=bytes_on_wire,
             exchange=exchange,
-            count_hist=(np.asarray(tele["chist"])[:steps]
+            count_hist=(np.asarray(tele["chist"])[:steps + 1]
                         if "chist" in tele else None),
         )
         if phased:
@@ -824,12 +1209,11 @@ class GopherEngine:
             t.pair_rounds = rounds
             t.spills = int(over_k.sum())
             t.phase_hist = phist
-            whist = np.asarray(tele["whist"])[:steps]
+            whist = np.asarray(tele["whist"])[:steps + 1]
             seg_end = np.asarray(tele["seg_end"])
             t.phase_switch_steps = np.unique(seg_end[:-1][seg_end[:-1] < steps])
             pw = np.zeros(K, np.int64)
-            np.add.at(pw, phist, whist)
-            pw[0] += int(tele["wire"]) - int(whist.sum())   # the prime round
+            np.add.at(pw, phist, whist)          # round 0 (the prime) included
             t.phase_wire = pw
             t.dense_retry_steps = int(tele["dsteps"])
         else:
@@ -919,7 +1303,7 @@ class GopherEngine:
                 nchanged = jnp.sum(changed.astype(jnp.int32))
                 tele = dict(liters=tele["liters"] + li,
                             hist=tele["hist"].at[step].set(nchanged),
-                            whist=tele["whist"].at[step].set(wire),
+                            whist=tele["whist"].at[step + 1].set(wire),
                             sent=tele["sent"] + nsent,
                             wire=tele["wire"] + wire,
                             **{k: tele[k] + v for k, v in ex.items()})
@@ -944,9 +1328,12 @@ class GopherEngine:
 
         primed = int(step) == 0
         start = int(step)
+        whist0 = jnp.zeros((self.max_supersteps + 1,), jnp.int32)
+        if primed:
+            whist0 = whist0.at[0].set(wire0)     # round 0 = the prime
         tele = dict(liters=jnp.zeros((self.pg.num_parts,), jnp.int32),
                     hist=jnp.zeros((self.max_supersteps,), jnp.int32),
-                    whist=jnp.zeros((self.max_supersteps,), jnp.int32),
+                    whist=whist0,
                     sent=(nsent0 if primed else jnp.int32(0)),
                     wire=(wire0 if primed else jnp.int32(0)))
         if self.exchange == "compact":
@@ -961,8 +1348,9 @@ class GopherEngine:
         # exchanges, so the byte model must count the same rounds (no prime
         # ran, and pre-resume supersteps shipped in the previous process)
         rounds = int(step) - start + (1 if primed else 0)
-        return jax.tree.map(np.asarray, state), self._telemetry(
-            step, tele, rounds=rounds)
+        t = self._telemetry(step, tele, rounds=rounds)
+        self._record_run_metrics(t)
+        return jax.tree.map(np.asarray, state), t
 
     def _sharded_fn(self, num_queries: Optional[int] = None, gb_example=None):
         spec = P(self.axis_name)

@@ -39,6 +39,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.gofs.formats import PAD
+from repro.obs import metrics as obs_metrics
 
 # tier codes, ordered so escalation is "+1 and clamp"
 EXCLUDED = 0    # zero structural occupancy: the pair can never carry a slot
@@ -53,10 +54,11 @@ COLD_THRESH = 0.5   # expected slots/round at or below this -> cold
 PROFILE_DECAY = 0.25  # update_profile: weight kept on the OLD ewma
 
 # Gopher Phases: the changed-histogram EWMA persisted on the graph block —
-# per-superstep expected frontier width (changed slots per exchange round),
-# folded across runs by update_changed_profile. Phase boundaries, the
-# announce-floor horizon and the per-phase width scaling all derive from it.
-PHASE_HIST_LEN = 64   # supersteps of history kept (EWMA truncates past this)
+# per-ROUND expected frontier width (changed slots per exchange round; round 0
+# is the inbox prime, superstep s ships round s+1), folded across runs by
+# update_changed_profile. Phase boundaries, the announce-floor horizon and the
+# per-phase width scaling all derive from it.
+PHASE_HIST_LEN = 64   # rounds of history kept (EWMA truncates past this)
 CHANGED_EPS = 0.5     # expected slots/round below this counts as quiesced
 WIDE_FRAC = 0.25      # frontier >= this fraction of peak -> the wide phase
 NARROW_FRAC = 0.05    # frontier < this fraction of peak -> the narrow phase
@@ -132,6 +134,8 @@ class TierPlan:
         t[ew > warm_cap] = HOT
         t[occupancy <= 1] = COLD
         t[occupancy <= 0] = EXCLUDED
+        obs_metrics.default_registry().counter(
+            "tiers_plans_built_total", labels={"kind": "static"}).inc()
         return TierPlan(num_parts=P, cap=int(cap), warm_cap=int(warm_cap),
                         tier_bytes=t.tobytes())
 
@@ -180,11 +184,12 @@ _NO_BOUNDARY = 1 << 30
 def phase_bands(changed_ewma: Optional[np.ndarray],
                 max_phases: int = 3) -> Tuple[Tuple[int, int, float], ...]:
     """Derive up to ``max_phases`` frontier bands from the changed-histogram
-    EWMA: ``[(end_superstep, span, mean_width), ...]``. A band ends at the
-    first superstep after which the expected width STAYS below its
-    threshold (``WIDE_FRAC`` / ``NARROW_FRAC`` of the peak) — robust to a
-    frontier that briefly dips and rebounds. With no usable history (cold
-    block, all-zero EWMA) there is a single unbounded band."""
+    EWMA: ``[(end_round, span, mean_width), ...]`` in ROUND units (round 0
+    is the inbox prime, superstep s ships round s+1). A band ends at the
+    first round after which the expected width STAYS below its threshold
+    (``WIDE_FRAC`` / ``NARROW_FRAC`` of the peak) — robust to a frontier
+    that briefly dips and rebounds. With no usable history (cold block,
+    all-zero EWMA) there is a single unbounded band."""
     if changed_ewma is None:
         return ((_NO_BOUNDARY, _NO_BOUNDARY, 1.0),)
     ch = np.asarray(changed_ewma, np.float64).reshape(-1)
@@ -211,7 +216,7 @@ def phase_bands(changed_ewma: Optional[np.ndarray],
 
 
 def expected_horizon(changed_ewma: Optional[np.ndarray]) -> Optional[int]:
-    """Expected superstep horizon of the next run: the last superstep the
+    """Expected round horizon of the next run: the last round the
     changed-histogram EWMA still expects activity at (plus one). ``None``
     when there is no usable history — callers must fall back to their
     unbounded/conservative behavior."""
@@ -248,8 +253,10 @@ class PhasedTierPlan:
     geometry a static cold plan only reaches on the NEXT version.
 
     Hashable — the engine's compiled-loop cache keys on it. ``boundaries``
-    holds each phase's predicted END superstep (the last phase carries the
-    ``_NO_BOUNDARY`` sentinel: it runs to quiescence). The engine may leave
+    holds each phase's predicted END round in ROUND units (round 0 is the
+    inbox prime, superstep s ships round s+1; phase k's segment stops
+    before shipping round ``boundaries[k]``). The last phase carries the
+    ``_NO_BOUNDARY`` sentinel: it runs to quiescence. The engine may leave
     a phase EARLY — global halt, or the dynamic demotion trigger (observed
     per-pair counts under the next phase's caps for ``DEMOTE_STREAK``
     consecutive supersteps) — and repairs any phase that truncated with a
@@ -289,6 +296,8 @@ class PhasedTierPlan:
             plans.append(TierPlan.build(ew * max(scale, 0.0), occupancy, cap,
                                         warm_div=warm_div))
         ref = plans[0]
+        obs_metrics.default_registry().counter(
+            "tiers_plans_built_total", labels={"kind": "phased"}).inc()
         return PhasedTierPlan(
             num_parts=ref.num_parts, cap=ref.cap, warm_cap=ref.warm_cap,
             phase_tier_bytes=tuple(p.tier_bytes for p in plans),
@@ -360,6 +369,8 @@ class PhasedTierPlan:
             plans.append(TierPlan.build(ew * (mean_k / mean0), occ, cap,
                                         warm_div=warm_div))
         ref = plans[0]
+        obs_metrics.default_registry().counter(
+            "tiers_plans_built_total", labels={"kind": "resume"}).inc()
         return PhasedTierPlan(
             num_parts=ref.num_parts, cap=ref.cap, warm_cap=ref.warm_cap,
             phase_tier_bytes=tuple(p.tier_bytes for p in plans),
@@ -586,37 +597,48 @@ def update_profile(host_gb: dict, pair_slots: np.ndarray, rounds: int,
     ew = host_gb.get("wire_ewma")
     if ew is None:
         return None
+    old = np.asarray(ew, np.float64)
     obs = np.asarray(pair_slots, np.float64) / max(int(rounds), 1)
-    out = (decay * np.asarray(ew, np.float64)
-           + (1.0 - decay) * obs).astype(np.float32)
+    out = (decay * old + (1.0 - decay) * obs).astype(np.float32)
     host_gb["wire_ewma"] = out
     if host_gb.get("announce_ewma") is not None:
         host_gb["announce_ewma"] = np.zeros_like(out)
+    reg = obs_metrics.default_registry()
+    reg.counter("tiers_profile_updates_total", labels={"profile": "wire"}).inc()
+    reg.gauge("tiers_profile_drift", labels={"profile": "wire"}).set(
+        float(np.abs(out - old).sum()) / max(float(np.abs(old).sum()), 1.0))
     return out
 
 
 def update_changed_profile(host_gb: dict, count_hist,
                            decay: float = PROFILE_DECAY) -> Optional[np.ndarray]:
-    """Fold one run's per-superstep changed-slot histogram into the block's
+    """Fold one run's per-ROUND changed-slot histogram into the block's
     ``changed_ewma`` (in place):
 
         ewma' = decay * ewma + (1 - decay) * count_hist (zero-extended)
 
     ``count_hist`` is ``Telemetry.count_hist`` — the Σ of packed per-pair
-    counts each exchange round shipped (the frontier width in mailbox
-    slots; compact, tiered and phased runs all record it). Observations are
-    ZERO-extended past the run's realized supersteps: a run that converged
-    early is evidence the tail is quiet, exactly what the phase boundaries
-    and the announce-floor horizon should learn. Entries past
-    ``PHASE_HIST_LEN`` are truncated (a run that long pins its tail phase
-    anyway). A block with no ``changed_ewma`` is left untouched."""
+    counts each exchange round shipped, indexed in round units: entry 0 is
+    the inbox prime, entry s+1 is superstep s's exchange (the frontier
+    width in mailbox slots; compact, tiered and phased runs all record
+    it). Observations are ZERO-extended past the run's realized rounds: a
+    run that converged early is evidence the tail is quiet, exactly what
+    the phase boundaries and the announce-floor horizon should learn.
+    Entries past ``PHASE_HIST_LEN`` are truncated (a run that long pins
+    its tail phase anyway). A block with no ``changed_ewma`` is left
+    untouched."""
     ch = host_gb.get("changed_ewma")
     if ch is None or count_hist is None:
         return None
     obs = np.zeros(PHASE_HIST_LEN, np.float64)
     hist = np.asarray(count_hist, np.float64).reshape(-1)[:PHASE_HIST_LEN]
     obs[:hist.size] = hist
-    out = (decay * np.asarray(ch, np.float64)
-           + (1.0 - decay) * obs).astype(np.float32)
+    old = np.asarray(ch, np.float64)
+    out = (decay * old + (1.0 - decay) * obs).astype(np.float32)
     host_gb["changed_ewma"] = out
+    reg = obs_metrics.default_registry()
+    reg.counter("tiers_profile_updates_total",
+                labels={"profile": "changed"}).inc()
+    reg.gauge("tiers_profile_drift", labels={"profile": "changed"}).set(
+        float(np.abs(out - old).sum()) / max(float(np.abs(old).sum()), 1.0))
     return out

@@ -59,6 +59,23 @@ def shrink_after_failure(old: MeshPlan, lost_chips: int) -> MeshPlan:
     return MeshPlan((data, model), ("data", "model"))
 
 
+def rebalance_hint(skew: dict, threshold: float = 1.5) -> Optional[dict]:
+    """Gopher Scope feedback for the elastic layer: given a live skew report
+    (``Telemetry.skew()`` / ``SkewTracker.report()``), decide whether the
+    virtual-partition layout is worth re-balancing and which partition to
+    shed load FROM. GoFS partition count is decoupled from device count, so
+    acting on the hint is a repartition/migration, not a mesh change.
+    Returns ``None`` while the imbalance score (max/mean — the
+    wasted-speedup factor under the superstep barrier) stays at or below
+    ``threshold``."""
+    imb = float(skew.get("imbalance", 0.0))
+    if imb <= threshold:
+        return None
+    return dict(migrate_from=int(skew.get("straggler", -1)),
+                imbalance=imb,
+                wasted_speedup_pct=round((1.0 - 1.0 / imb) * 100.0, 1))
+
+
 def restart(checkpointer, state_like, plan: MeshPlan, pspecs):
     """Re-shard the last committed checkpoint onto the new mesh."""
     from repro.training.shardspec import named

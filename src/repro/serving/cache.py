@@ -67,9 +67,15 @@ class ResultCache:
     def __len__(self) -> int:
         return len(self._d)
 
+    def hit_rate(self) -> float:
+        """Hits / lookups over the cache's lifetime (0.0 before any get)."""
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
     def stats(self) -> dict:
         return dict(entries=len(self._d), hits=self.hits, misses=self.misses,
-                    invalidations=self.invalidations)
+                    invalidations=self.invalidations,
+                    hit_rate=round(self.hit_rate(), 4))
 
 
 def choose_landmarks(pg: PartitionedGraph, num: int,

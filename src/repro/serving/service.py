@@ -31,6 +31,8 @@ from repro.core import (GopherEngine, PhasedTierPlan, device_block,
                         host_graph_block, update_changed_profile,
                         update_profile)
 from repro.gofs.formats import PartitionedGraph
+from repro.obs import metrics as obs_metrics
+from repro.obs.skew import SkewTracker
 from repro.serving import planner as pl
 from repro.serving.batched import (BatchedPersonalizedPageRank,
                                    BatchedSemiringProgram,
@@ -71,6 +73,12 @@ class ServiceStats:
         default_factory=lambda: deque(maxlen=1024))
     latencies_s: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=8192))
+    delta_apply_s: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=1024))
+    # back-reference set by GraphQueryService so ``svc.stats()`` can fold in
+    # per-graph skew and landmark state (Gopher Scope)
+    _service: object = dataclasses.field(default=None, repr=False,
+                                         compare=False)
 
     def qps(self) -> float:
         return self.served / self.busy_seconds if self.busy_seconds > 0 else 0.0
@@ -79,6 +87,9 @@ class ServiceStats:
         if not self.latencies_s:
             return 0.0
         return float(np.percentile(np.asarray(self.latencies_s), pct) * 1e3)
+
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.served if self.served > 0 else 0.0
 
     def summary(self) -> dict:
         return dict(served=self.served, cache_hits=self.cache_hits,
@@ -89,13 +100,39 @@ class ServiceStats:
                     mean_fill=round(float(np.mean(self.lane_fill)), 2)
                     if self.lane_fill else 1.0)
 
+    def __call__(self) -> dict:
+        """The Gopher Scope serving report — ``svc.stats()``. Everything in
+        :meth:`summary` plus the full latency tail, cache hit rate,
+        delta-apply latency, per-graph partition imbalance (live
+        SkewTracker) and landmark staleness."""
+        out = self.summary()
+        out.update(
+            p95_ms=round(self.latency_ms(95), 2),
+            cache_hit_rate=round(self.cache_hit_rate(), 4),
+            engine_supersteps=self.engine_supersteps,
+            landmark_rebootstraps=self.landmark_rebootstraps,
+            delta_apply_p50_ms=round(
+                float(np.percentile(np.asarray(self.delta_apply_s), 50) * 1e3),
+                3) if self.delta_apply_s else 0.0)
+        svc = self._service
+        if svc is not None:
+            out["imbalance"] = {g: t.imbalance()
+                                for g, t in svc.skew.items()}
+            out["skew"] = {g: t.report() for g, t in svc.skew.items()}
+            out["result_cache"] = svc.cache.stats()
+            lms = {g: svc.landmark_telemetry(g) for g in svc.landmark_caches}
+            if lms:
+                out["landmarks"] = lms
+        return out
+
 
 class GraphQueryService:
     """Serves sssp / bfs / reach / ppr queries over registered graphs."""
 
     def __init__(self, graphs: Dict[str, PartitionedGraph],
                  backend: str = "local", mesh=None, max_batch: int = 64,
-                 cache_capacity: int = 1024, ppr_iters: int = 30):
+                 cache_capacity: int = 1024, ppr_iters: int = 30,
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None):
         self.graphs = dict(graphs)
         self.backend = backend
         self.mesh = mesh
@@ -103,6 +140,10 @@ class GraphQueryService:
         self.ppr_iters = ppr_iters
         self.cache = ResultCache(cache_capacity)
         self.stats = ServiceStats()
+        self.stats._service = self
+        self._metrics = metrics
+        # per-graph straggler picture, fed by every batch run (Gopher Scope)
+        self.skew: Dict[str, SkewTracker] = {}
         self.landmark_caches: Dict[str, LandmarkCache] = {}
         self._gb: Dict[str, dict] = {}       # device graph blocks
         self._host_gb: Dict[str, dict] = {}  # patchable host twins (temporal)
@@ -110,6 +151,11 @@ class GraphQueryService:
         self._engines: Dict[tuple, GopherEngine] = {}
         self._pending: List[Request] = []
         self._next_ticket = 0
+
+    @property
+    def metrics(self) -> obs_metrics.MetricsRegistry:
+        return (self._metrics if self._metrics is not None
+                else obs_metrics.default_registry())
 
     # ---------------- graph lifecycle (temporal serving) ----------------
     def _cache_key(self, q: pl.Query) -> tuple:
@@ -166,6 +212,7 @@ class GraphQueryService:
         off the dirty seeds."""
         from repro.gofs.temporal import apply_delta as _apply
         from repro.serving.cache import LandmarkCache
+        t0 = time.perf_counter()
         old_lc = self.landmark_caches.get(name)
         host_gb = self._host_gb.get(name)
         if host_gb is None:
@@ -182,6 +229,8 @@ class GraphQueryService:
                     strategy=old_lc.strategy, backend=self.backend,
                     mesh=self.mesh)
                 self.stats.landmark_rebootstraps += 1
+                self.metrics.counter("serving_landmark_rebootstraps_total",
+                                     labels={"graph": name}).inc()
             else:
                 exchange, plan = "auto", None
                 if self._exchange_mode() == "phased":
@@ -192,6 +241,16 @@ class GraphQueryService:
                     backend=self.backend, mesh=self.mesh,
                     gb=self._gb[name], exchange=exchange, tier_plan=plan,
                     profile_block=res.block)
+        dt = time.perf_counter() - t0
+        self.stats.delta_apply_s.append(dt)
+        reg = self.metrics
+        reg.counter("serving_deltas_applied_total",
+                    labels={"graph": name}).inc()
+        reg.histogram("serving_delta_apply_seconds").observe(dt)
+        lc = self.landmark_caches.get(name)
+        if lc is not None:
+            reg.gauge("serving_landmark_stale_frac",
+                      labels={"graph": name}).set(lc.stale_frac_ewma)
         return res
 
     def landmark_telemetry(self, name: str) -> Optional[dict]:
@@ -274,6 +333,19 @@ class GraphQueryService:
         self.stats.served += len(done)
         self.stats.latencies_s.extend(resp.latency_s for resp in done)
         self.stats.busy_seconds += time.perf_counter() - t0
+        reg = self.metrics
+        hits = sum(1 for resp in done if resp.cached)
+        reg.counter("serving_requests_total",
+                    labels={"result": "hit"}).inc(hits)
+        reg.counter("serving_requests_total",
+                    labels={"result": "served"}).inc(len(done) - hits)
+        reg.counter("serving_requests_total",
+                    labels={"result": "rejected"}).inc(
+                        len(responses) - len(done))
+        lat = reg.histogram("serving_latency_seconds")
+        for resp in done:
+            lat.observe(resp.latency_s)
+        reg.gauge("serving_cache_hit_rate").set(self.stats.cache_hit_rate())
         return responses
 
     # ---------------- batch execution ----------------
@@ -295,6 +367,16 @@ class GraphQueryService:
         self.stats.batches += 1
         self.stats.engine_supersteps += tele.supersteps
         self.stats.lane_fill.append(batch.fill)
+        # Gopher Scope: fold the run into the graph's live straggler picture
+        tracker = self.skew.setdefault(batch.graph, SkewTracker())
+        tracker.observe(tele)
+        reg = self.metrics
+        reg.counter("serving_batches_total",
+                    labels={"graph": batch.graph,
+                            "family": batch.family}).inc()
+        reg.histogram("serving_batch_supersteps").observe(tele.supersteps)
+        reg.gauge("serving_partition_imbalance",
+                  labels={"graph": batch.graph}).set(tracker.imbalance())
         # Gopher Mesh/Phases feedback: fold this batch's per-pair wire
         # observation into the graph's traffic profile and its frontier
         # histogram into the changed-histogram EWMA (the next plan rebuild

@@ -257,7 +257,9 @@ def test_phased_matches_dense(backend, road, taught):
         assert tp.exchange == "phased" and not tp.retried
         P = pg.num_parts
         assert tp.phase_hist is not None
-        assert tp.phase_hist.shape == (tp.supersteps,)
+        # round-indexed: supersteps + 1 entries, round 0 = the inbox prime
+        assert tp.phase_hist.shape == (tp.supersteps + 1,)
+        assert tp.phase_hist[0] == 0                     # prime rides phase 0
         assert np.all(np.diff(tp.phase_hist) >= 0)       # phases only advance
         assert tp.phase_hist.max() < K if tp.supersteps else True
         assert tp.count_hist is not None
@@ -304,8 +306,10 @@ def test_demotion_trigger_jumps_to_next_segment(road):
     assert tt.supersteps == td.supersteps
     if tt.supersteps > DEMOTE_STREAK:
         assert np.array_equal(tt.phase_switch_steps, [DEMOTE_STREAK])
-        assert np.all(tt.phase_hist[:DEMOTE_STREAK] == 0)
-        assert np.all(tt.phase_hist[DEMOTE_STREAK:] == 1)
+        # rounds 0..DEMOTE_STREAK (prime + the streak supersteps) ride the
+        # wide phase; every later round is in the demoted segment
+        assert np.all(tt.phase_hist[:DEMOTE_STREAK + 1] == 0)
+        assert np.all(tt.phase_hist[DEMOTE_STREAK + 1:] == 1)
 
 
 def test_quiesce_exactly_at_predicted_switch(road):
@@ -319,19 +323,21 @@ def test_quiesce_exactly_at_predicted_switch(road):
     S = td.supersteps
     base = TierPlan.from_graph(pg)
     allcold = np.where(base.tiers == EXCLUDED, EXCLUDED, COLD).astype(np.int8)
+    # boundaries are in ROUND units: the run's last exchange is round S
+    # (superstep S - 1 ships it), so the wide band must cover rounds < S + 1
     plan = PhasedTierPlan(num_parts=base.num_parts, cap=base.cap,
                           warm_cap=base.warm_cap,
                           phase_tier_bytes=(base.tier_bytes,
                                             allcold.tobytes()),
-                          boundaries=(S, _NO_BOUNDARY))
+                          boundaries=(S + 1, _NO_BOUNDARY))
     st, tt = GopherEngine(pg, prog, exchange="phased", tier_plan=plan).run()
     assert np.array_equal(np.asarray(sd["x"]), np.asarray(st["x"]))
     assert tt.supersteps == S                      # no leaked supersteps
     assert np.all(tt.phase_hist == 0)              # phase 1 never ran
     assert tt.spills == 0 and tt.dense_retry_steps == 0
-    # one superstep earlier and the LAST live superstep crosses into the
+    # one round earlier and the LAST live superstep crosses into the
     # all-cold phase: the in-loop dense retry absorbs it, results exact
-    plan2 = dataclasses.replace(plan, boundaries=(S - 1, _NO_BOUNDARY))
+    plan2 = dataclasses.replace(plan, boundaries=(S, _NO_BOUNDARY))
     st2, tt2 = GopherEngine(pg, prog, exchange="phased",
                             tier_plan=plan2).run()
     assert np.array_equal(np.asarray(sd["x"]), np.asarray(st2["x"]))

@@ -142,7 +142,12 @@ def test_compact_exchange_bit_identical_to_dense(backend, road):
         # frontier and can never ship more
         assert tc.wire_slots <= td.wire_slots
         assert tc.bytes_on_wire < td.bytes_on_wire
-        assert tc.wire_hist is not None and len(tc.wire_hist) == tc.supersteps
+        # round-indexed: supersteps + 1 entries, slot 0 = the inbox prime,
+        # and the histogram fully accounts the run's shipped slots
+        assert tc.wire_hist is not None
+        assert len(tc.wire_hist) == tc.supersteps + 1
+        assert int(np.sum(tc.wire_hist)) == tc.wire_slots
+        assert int(np.sum(td.wire_hist)) == td.wire_slots
         P, cap = pg.num_parts, pg.mailbox_cap
         assert np.all(np.asarray(td.wire_hist) == P * P * cap)
         assert np.all(np.asarray(tc.wire_hist) <= P * P * cap)
