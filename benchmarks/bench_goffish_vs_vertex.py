@@ -4,7 +4,7 @@ Components / SSSP / PageRank on RN / TR / LJ analogues."""
 from __future__ import annotations
 
 from repro.algorithms import connected_components, pagerank, sssp
-from benchmarks.common import DATASETS, get_pg, emit, timed
+from benchmarks.common import get_pg, emit, timed
 
 
 def run():

@@ -8,8 +8,8 @@ import tempfile
 
 import numpy as np
 
-from benchmarks.common import DATASETS, NUM_PARTS, emit, timed
-from repro.gofs import GoFSStore, bfs_grow_partition
+from benchmarks.common import NUM_PARTS, emit, timed
+from repro.gofs import GoFSStore
 from repro.gofs.formats import partition_graph
 
 

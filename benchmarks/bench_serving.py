@@ -112,7 +112,7 @@ if __name__ == "__main__":
     r16 = res.get(16, {})
     ok = r16.get("vs_naive", 0.0) >= 3.0
     print(f"acceptance: batched Q=16 is {r16.get('vs_naive', 0.0):.0f}x the "
-          f"sequential single-query path (>= 3x required) -> "
+          "sequential single-query path (>= 3x required) -> "
           f"{'PASS' if ok else 'FAIL'}; "
           f"{r16.get('vs_seq', 0.0):.2f}x the compile-cached sequential "
-          f"service (the strong baseline)")
+          "service (the strong baseline)")

@@ -11,7 +11,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import GopherEngine, SemiringProgram, init_max_vertex
-from repro.gofs.formats import PAD, PartitionedGraph
+from repro.gofs.formats import PartitionedGraph
 
 
 def connected_components(pg: PartitionedGraph, mode: str = "subgraph",

@@ -1,0 +1,73 @@
+"""Gopher Sentinel — static analysis over the engine's riskiest constructs.
+
+Three passes (see each module's docstring for the invariants):
+
+- :mod:`repro.analysis.collectives` — Pass 1, the SPMD collective
+  verifier: cond-branch collective agreement (or proven-replicated
+  predicates), mesh axis binding, trace-time-constant tier plans.
+- :mod:`repro.analysis.semiring` — Pass 2, the semiring law checker:
+  ⊕/⊗ laws the sweep and the dense-retry exactness claim assume.
+- :mod:`repro.analysis.kernel_lint` — Pass 3, the Pallas kernel linter:
+  grid divisibility, store masking, ±inf-safe selects, aliasing races.
+
+``GopherEngine(..., validate=True)`` runs Passes 1–2 on every compiled-loop
+cache MISS (a hit means an identical configuration already passed);
+``python -m repro.launch.sentinel`` runs the whole matrix plus Pass 3 and
+the HLO cross-check in CI.
+"""
+from repro.analysis.collectives import (
+    HLO_KIND,
+    CollectiveOp,
+    CollectiveSummary,
+    CondReport,
+    check_plan_static,
+    trace_loop,
+    verify_collectives,
+    verify_jaxpr,
+)
+from repro.analysis.kernel_lint import (
+    lint_kernel_file,
+    lint_kernels,
+    lint_source,
+)
+from repro.analysis.report import (
+    ERROR,
+    INFO,
+    WARNING,
+    SentinelError,
+    Violation,
+    assert_clean,
+    errors,
+    split_severity,
+)
+from repro.analysis.semiring import (
+    REGISTRY,
+    SemiringSpec,
+    check_program,
+    check_semiring,
+    probe_laws,
+)
+
+__all__ = [
+    "ERROR", "INFO", "WARNING", "HLO_KIND", "REGISTRY",
+    "CollectiveOp", "CollectiveSummary", "CondReport", "SemiringSpec",
+    "SentinelError", "Violation",
+    "assert_clean", "check_plan_static", "check_program", "check_semiring",
+    "errors", "lint_kernel_file", "lint_kernels", "lint_source",
+    "probe_laws", "split_severity", "trace_loop", "validate_engine",
+    "verify_collectives", "verify_jaxpr",
+]
+
+
+def validate_engine(engine, num_queries=None, gb_example=None):
+    """Passes 1–2 for one engine configuration: collective verification
+    over the exact loop about to be compiled, plan staticness, and the
+    program's semiring laws. Raises :class:`SentinelError` naming every
+    offending equation/field/law on error-severity findings; returns the
+    full violation list (incl. warnings/infos) when clean."""
+    violations = list(check_program(engine.program, engine.exchange))
+    summary, vs = verify_collectives(engine, num_queries=num_queries,
+                                     gb_example=gb_example)
+    violations += vs
+    assert_clean(violations)
+    return violations

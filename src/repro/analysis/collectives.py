@@ -1,0 +1,505 @@
+"""Gopher Sentinel Pass 1: the SPMD collective verifier.
+
+Walks the ClosedJaxpr of a compiled BSP loop (the exact function the engine
+jits — ``_run_batched`` on the local backend, the shard_map'd loop on the
+mesh backend) and checks the three invariants the exchange stack's
+deadlock-freedom and cache correctness rest on:
+
+1. **cond-branch collective agreement.** Both branches of every ``lax.cond``
+   must issue the same collective sequence — otherwise devices whose
+   predicate disagrees post mismatched collectives and the mesh deadlocks.
+   The phased exchange's dense-retry cond (engine.make_exchange_stages) is
+   the deliberate exception: its branches differ (one dense ``all_to_all``
+   vs. the tiered ``all_to_all`` + ``ppermute`` round-robin), which is only
+   safe because the predicate is REPLICATED — it derives from a full-mesh
+   ``psum``, so every device takes the same branch. The verifier therefore
+   accepts a mismatched cond iff its predicate is provably uniform: a
+   dataflow pass marks values produced from constants, or from full
+   mesh-axis reductions (``psum``/``pmax``/``pmin`` with no
+   ``axis_index_groups``), or from pure functions of already-uniform values;
+   ``axis_index`` and the shard-local loop carries are the non-uniform
+   sources. (Single-axis meshes: a psum over the one mesh axis of size > 1
+   replicates fully.)
+
+2. **axis binding.** Every collective's named axes must be bound by the
+   enclosing ``shard_map`` mesh (vmap-bound names like the engine's
+   ``vparts`` are resolved at trace time and never reach the jaxpr, so any
+   surviving unknown name is a real bug). Collectives over a size-1 axis
+   are trivially safe and excluded from the branch-agreement traces.
+
+3. **trace-time-constant tier tables.** ``TierPlan``/``PhasedTierPlan`` key
+   the module-level compiled-loop cache, so their fields must be concrete
+   hashable host values — a tracer or device array smuggled into a plan
+   silently breaks cache keying (unhashable → every run re-traces; worse, a
+   leaked tracer fails at trace time with an opaque error far from the
+   plan). :func:`check_plan_static` validates field types, hashability and
+   geometry before the engine ever traces.
+
+The walk runs on :class:`jax.sharding.AbstractMesh` shapes — no devices, no
+subprocess — so the whole exchange×algorithm×mesh matrix is checkable on a
+single-core CI box (see launch/sentinel.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis.report import ERROR, Violation
+
+# jaxpr primitive -> post-compile HLO opcode (the hloparse cross-check's
+# translation table). pmax/pmin lower through the same all-reduce.
+HLO_KIND = {
+    "psum": "all-reduce", "pmax": "all-reduce", "pmin": "all-reduce",
+    "ppermute": "collective-permute", "all_to_all": "all-to-all",
+    "all_gather": "all-gather", "reduce_scatter": "reduce-scatter",
+    "psum_invariant": "all-reduce",
+}
+_REDUCE_PRIMS = ("psum", "pmax", "pmin", "psum_invariant")
+_COLLECTIVE_PRIMS = frozenset(HLO_KIND)
+
+
+def _source_line(eqn) -> str:
+    """file:line of the user frame that created this equation (best-effort —
+    jax keeps it on eqn.source_info, a private-but-stable surface)."""
+    try:
+        from jax._src import source_info_util
+        frame = source_info_util.user_frame(eqn.source_info)
+        if frame is not None:
+            return f"{frame.file_name}:{frame.start_line}"
+    except Exception:
+        pass
+    return "<unknown>"
+
+
+def _named_axes(eqn) -> Tuple[str, ...]:
+    """The collective's named (mesh/vmap) axes; positional vmap axes (ints)
+    are excluded — they reduce device-locally."""
+    p = eqn.params
+    if eqn.primitive.name in _REDUCE_PRIMS:
+        raw = p.get("axes", ())
+    else:
+        raw = p.get("axis_name", ())
+    if not isinstance(raw, (tuple, list)):
+        raw = (raw,)
+    return tuple(a for a in raw if isinstance(a, str))
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective equation, located by its jaxpr path."""
+    kind: str                            # jaxpr primitive name
+    axes: Tuple[str, ...]                # named mesh axes it runs over
+    shape: Tuple[int, ...]               # first result shape
+    dtype: str
+    perm: Optional[Tuple[Tuple[int, int], ...]]  # ppermute only
+    path: str
+    source: str = "<unknown>"
+
+    def signature(self):
+        """What both cond branches must agree on: everything except the
+        location."""
+        return (self.kind, self.axes, self.shape, self.dtype, self.perm)
+
+
+@dataclasses.dataclass(frozen=True)
+class CondReport:
+    """One ``lax.cond`` whose branches were compared."""
+    path: str
+    source: str
+    branch_traces: Tuple[Tuple[tuple, ...], ...]  # per-branch signatures
+    branches_equal: bool
+    predicate_uniform: bool
+
+    @property
+    def safe(self) -> bool:
+        return self.branches_equal or self.predicate_uniform
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    """Pass 1 output: the loop's full collective inventory plus every cond
+    verdict. ``counts`` covers only MESH-EFFECTIVE collectives (named axis
+    of size > 1) — what actually hits the interconnect."""
+    collectives: List[CollectiveOp]
+    conds: List[CondReport]
+    mesh_axes: Dict[str, int]
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0) + 1
+        return out
+
+    def expected_hlo_kinds(self) -> Tuple[str, ...]:
+        """The HLO collective opcodes the compiled module must contain —
+        the jaxpr-level half of the sentinel↔HLO cross-check."""
+        return tuple(sorted({HLO_KIND[c.kind] for c in self.collectives}))
+
+    def to_json(self) -> dict:
+        return {
+            "mesh_axes": dict(self.mesh_axes),
+            "counts": self.counts,
+            "expected_hlo_kinds": list(self.expected_hlo_kinds()),
+            "conds": [
+                {"path": c.path, "source": c.source,
+                 "branches_equal": c.branches_equal,
+                 "predicate_uniform": c.predicate_uniform,
+                 "safe": c.safe,
+                 "branch_traces": [[list(map(str, sig)) for sig in t]
+                                   for t in c.branch_traces]}
+                for c in self.conds],
+        }
+
+
+def _sub_jaxprs(params: dict, skip=()):
+    """(key, open Jaxpr) pairs for every sub-jaxpr in an eqn's params —
+    duck-typed so pjit/while/scan/shard_map/custom_* all walk the same way."""
+    for k, v in params.items():
+        if k in skip:
+            continue
+        vs = v if isinstance(v, (tuple, list)) else (v,)
+        for i, item in enumerate(vs):
+            name = k if len(vs) == 1 else f"{k}[{i}]"
+            if hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+                yield name, item.jaxpr       # ClosedJaxpr (delegates .eqns)
+            elif hasattr(item, "eqns"):
+                yield name, item             # open Jaxpr
+
+
+def _is_literal(v) -> bool:
+    return not hasattr(v, "count") and hasattr(v, "val") or \
+        type(v).__name__ == "Literal"
+
+
+class _Walker:
+    """Recursive jaxpr visitor accumulating collectives, cond verdicts and
+    violations. One instance per verified loop."""
+
+    def __init__(self, mesh_axes: Dict[str, int]):
+        self.mesh_axes = dict(mesh_axes)
+        self.collectives: List[CollectiveOp] = []
+        self.conds: List[CondReport] = []
+        self.violations: List[Violation] = []
+
+    # ---------------- uniformity dataflow ----------------
+    def _uniform_vars(self, jaxpr, seed_uniform=frozenset()):
+        """Forward pass over one (open) jaxpr: the set of vars provably
+        REPLICATED across the mesh. Sources of non-uniformity: the jaxpr's
+        invars (shard-local data, unless seeded), ``axis_index``, and
+        ``iota``-free primitives never add any. Uniformity propagates
+        through any primitive whose inputs are all uniform (a pure function
+        of replicated values is replicated), and is CREATED by a full
+        mesh-axis reduction (psum/pmax/pmin, no axis_index_groups)."""
+        live_axes = {a for a, s in self.mesh_axes.items() if s > 1}
+        uniform = set(v for v in jaxpr.constvars)
+        uniform |= set(seed_uniform)
+
+        def invar_uniform(v):
+            return _is_literal(v) or v in uniform
+
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            out_uniform = False
+            if name == "axis_index":
+                out_uniform = False
+            elif (name in _REDUCE_PRIMS
+                  and eqn.params.get("axis_index_groups") is None
+                  and live_axes <= set(_named_axes(eqn))):
+                out_uniform = True
+            elif name == "pjit" or name == "closed_call":
+                # propagate through the call: seed the callee's invars with
+                # the call-site uniformity, lift its outvar verdicts back
+                sub = dict(eqn.params).get("jaxpr")
+                inner = getattr(sub, "jaxpr", sub)
+                if inner is not None and hasattr(inner, "eqns"):
+                    seed = {iv for iv, cv in zip(inner.invars, eqn.invars)
+                            if invar_uniform(cv)}
+                    inner_uniform = self._uniform_vars(inner, seed)
+                    for ov, co in zip(inner.outvars, eqn.outvars):
+                        if _is_literal(ov) or ov in inner_uniform:
+                            uniform.add(co)
+                    continue
+                out_uniform = all(invar_uniform(v) for v in eqn.invars)
+            else:
+                out_uniform = all(invar_uniform(v) for v in eqn.invars)
+            if out_uniform:
+                uniform.update(eqn.outvars)
+        return uniform
+
+    # ---------------- collective trace extraction ----------------
+    def _effective(self, eqn) -> bool:
+        """Does this collective move data across devices? (named axis with
+        size > 1 — size-1 axes are trace-time no-ops)."""
+        axes = _named_axes(eqn)
+        return any(self.mesh_axes.get(a, 0) > 1 for a in axes)
+
+    def _record(self, eqn, path: str) -> CollectiveOp:
+        shape = ()
+        dtype = "?"
+        if eqn.outvars:
+            aval = getattr(eqn.outvars[0], "aval", None)
+            if aval is not None:
+                shape = tuple(getattr(aval, "shape", ()))
+                dtype = str(getattr(aval, "dtype", "?"))
+        perm = eqn.params.get("perm")
+        if perm is not None:
+            perm = tuple(tuple(p) for p in perm)
+        return CollectiveOp(kind=eqn.primitive.name, axes=_named_axes(eqn),
+                            shape=shape, dtype=dtype, perm=perm, path=path,
+                            source=_source_line(eqn))
+
+    def _branch_trace(self, jaxpr, path: str) -> Tuple[tuple, ...]:
+        """The ordered mesh-effective collective signatures a branch issues,
+        recursing through nested calls/loops (a while body's collectives
+        run a data-dependent number of times; for agreement purposes the
+        static sequence is what both branches must share)."""
+        sigs: List[tuple] = []
+        for i, eqn in enumerate(jaxpr.eqns):
+            name = eqn.primitive.name
+            if name in _COLLECTIVE_PRIMS:
+                if self._effective(eqn):
+                    sigs.append(self._record(eqn, f"{path}/{name}[{i}]")
+                                .signature())
+                continue
+            if name == "cond":
+                # nested cond: the branch's contribution is itself
+                # branch-dependent; fold each nested branch trace in as a
+                # structured element so outer comparison still works
+                sub = tuple(self._branch_trace(b.jaxpr, f"{path}/cond[{i}]")
+                            for b in eqn.params["branches"])
+                sigs.append(("cond", sub))
+                continue
+            for key, sj in _sub_jaxprs(eqn.params):
+                inner = self._branch_trace(sj, f"{path}/{name}[{i}].{key}")
+                if name == "while" and inner:
+                    sigs.append(("while", tuple(inner)))
+                else:
+                    sigs.extend(inner)
+        return tuple(sigs)
+
+    # ---------------- main walk ----------------
+    def walk(self, jaxpr, path: str = "") -> None:
+        uniform = self._uniform_vars(jaxpr)
+        for i, eqn in enumerate(jaxpr.eqns):
+            name = eqn.primitive.name
+            here = f"{path}/{name}[{i}]"
+            if name in _COLLECTIVE_PRIMS:
+                op = self._record(eqn, here)
+                unknown = [a for a in op.axes if a not in self.mesh_axes]
+                if unknown:
+                    self.violations.append(Violation(
+                        pass_name="collectives", code="UNBOUND_AXIS",
+                        where=f"{here} ({op.source})",
+                        detail=(f"{name} over axis {unknown} is not bound "
+                                "by the enclosing shard_map mesh "
+                                f"{dict(self.mesh_axes)}; a vmap axis "
+                                "should have been resolved at trace time "
+                                "— this collective cannot lower"),
+                        severity=ERROR))
+                if self._effective(eqn):
+                    self.collectives.append(op)
+                continue
+            if name == "cond":
+                self._check_cond(eqn, here, uniform)
+                # still walk branches for axis-binding + inventory
+                for bi, br in enumerate(eqn.params["branches"]):
+                    self.walk(br.jaxpr, f"{here}.branch[{bi}]")
+                continue
+            if name == "shard_map":
+                mesh = eqn.params.get("mesh")
+                inner_axes = dict(getattr(mesh, "shape", {}) or {})
+                outer = self.mesh_axes
+                self.mesh_axes = {**outer, **inner_axes}
+                for key, sj in _sub_jaxprs(eqn.params, skip=("mesh",)):
+                    self.walk(sj, f"{here}.{key}")
+                self.mesh_axes = outer
+                continue
+            for key, sj in _sub_jaxprs(eqn.params):
+                self.walk(sj, f"{here}.{key}")
+
+    def _check_cond(self, eqn, path: str, uniform) -> None:
+        branches = eqn.params["branches"]
+        traces = tuple(self._branch_trace(b.jaxpr, f"{path}.branch[{bi}]")
+                       for bi, b in enumerate(branches))
+        equal = all(t == traces[0] for t in traces[1:])
+        # the predicate is the cond's first invar (the branch index)
+        pred = eqn.invars[0]
+        pred_uniform = _is_literal(pred) or pred in uniform
+        src = _source_line(eqn)
+        if any(traces):  # only conds that issue collectives matter
+            self.conds.append(CondReport(
+                path=path, source=src, branch_traces=traces,
+                branches_equal=equal, predicate_uniform=pred_uniform))
+            if not equal and not pred_uniform:
+                pretty = [" ; ".join(str(s) for s in t) or "<none>"
+                          for t in traces]
+                self.violations.append(Violation(
+                    pass_name="collectives",
+                    code="COND_COLLECTIVE_MISMATCH",
+                    where=f"{path} ({src})",
+                    detail=("lax.cond branches issue different collective "
+                            "sequences and the predicate is not provably "
+                            "replicated (no full mesh-axis psum on its "
+                            "dataflow path): devices that disagree on the "
+                            "predicate would post mismatched collectives "
+                            "and deadlock the mesh. branch traces: "
+                            + " || ".join(f"[{bi}] {p}"
+                                          for bi, p in enumerate(pretty))),
+                    severity=ERROR))
+
+
+# ---------------- plan staticness (check c) ----------------
+
+def _static_field_ok(value) -> bool:
+    if isinstance(value, (int, float, str, bytes, bool, type(None))):
+        return True
+    if isinstance(value, tuple):
+        return all(_static_field_ok(v) for v in value)
+    return False
+
+
+def check_plan_static(plan, where: str = "tier_plan") -> List[Violation]:
+    """Verify a TierPlan/PhasedTierPlan is a trace-time constant fit to key
+    the compiled-loop cache: every field a concrete hashable host value (no
+    tracers, no device/NumPy arrays), hash() stable under copy, and the
+    tier-table geometry self-consistent."""
+    out: List[Violation] = []
+    if plan is None:
+        return out
+    name = type(plan).__name__
+
+    for f in dataclasses.fields(plan):
+        v = getattr(plan, f.name)
+        if isinstance(v, jax.core.Tracer):
+            out.append(Violation(
+                pass_name="collectives", code="PLAN_TRACER_LEAK",
+                where=f"{where}.{f.name}",
+                detail=(f"{name}.{f.name} holds a jax tracer ({v!r}): the "
+                        "plan was built inside a traced function, so its "
+                        "tables are not trace-time constants — the "
+                        "compiled-loop cache cannot key on it and the "
+                        "routing tables would bake a tracer into the "
+                        "schedule. Build plans on the host, outside jit."),
+                severity=ERROR))
+            continue
+        if isinstance(v, (np.ndarray, jax.Array)):
+            out.append(Violation(
+                pass_name="collectives", code="PLAN_UNHASHABLE_FIELD",
+                where=f"{where}.{f.name}",
+                detail=(f"{name}.{f.name} is a {type(v).__name__} — arrays "
+                        "are unhashable, so this plan cannot key the "
+                        "compiled-loop cache (every run would re-trace). "
+                        "Store tables as bytes/tuples (see "
+                        "TierPlan.tier_bytes)."),
+                severity=ERROR))
+            continue
+        if not _static_field_ok(v):
+            out.append(Violation(
+                pass_name="collectives", code="PLAN_NON_STATIC_FIELD",
+                where=f"{where}.{f.name}",
+                detail=(f"{name}.{f.name} has non-static type "
+                        f"{type(v).__name__}; plan fields must be concrete "
+                        "hashable host values (int/bytes/str/tuple)"),
+                severity=ERROR))
+    if out:
+        return out
+
+    try:
+        h1 = hash(plan)
+        h2 = hash(dataclasses.replace(plan))
+        if h1 != h2 or plan != dataclasses.replace(plan):
+            raise ValueError("hash/eq not stable under copy")
+    except Exception as e:
+        out.append(Violation(
+            pass_name="collectives", code="PLAN_UNHASHABLE",
+            where=where,
+            detail=(f"{name} is not stably hashable ({e}); the "
+                    "compiled-loop cache keys on the plan"),
+            severity=ERROR))
+        return out
+
+    # geometry self-consistency (cheap, catches byte-table corruption)
+    P = plan.num_parts
+    tables = (plan.phase_tier_bytes if hasattr(plan, "phase_tier_bytes")
+              else (plan.tier_bytes,))
+    for k, tb in enumerate(tables):
+        if len(tb) != P * P:
+            out.append(Violation(
+                pass_name="collectives", code="PLAN_BAD_GEOMETRY",
+                where=f"{where}.phase[{k}]" if len(tables) > 1 else where,
+                detail=(f"tier table has {len(tb)} bytes, expected "
+                        f"P*P = {P * P}"),
+                severity=ERROR))
+    if hasattr(plan, "boundaries"):
+        b = plan.boundaries
+        if len(b) != len(tables):
+            out.append(Violation(
+                pass_name="collectives", code="PLAN_BAD_GEOMETRY",
+                where=f"{where}.boundaries",
+                detail=(f"{len(tables)} phases but {len(b)} boundaries"),
+                severity=ERROR))
+        elif any(int(b[i]) >= int(b[i + 1]) for i in range(len(b) - 1)):
+            out.append(Violation(
+                pass_name="collectives", code="PLAN_BAD_GEOMETRY",
+                where=f"{where}.boundaries",
+                detail=f"phase boundaries must be strictly increasing: {b}",
+                severity=ERROR))
+    return out
+
+
+# ---------------- engine-level entry points ----------------
+
+def trace_loop(engine, num_queries: Optional[int] = None, gb_example=None):
+    """The ClosedJaxpr of the exact BSP loop the engine would compile for
+    this configuration — traced with shape-only inputs (works on
+    AbstractMesh: no devices needed)."""
+    from repro.core.blocks import graph_block
+    if gb_example is not None:
+        gb_shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                     for k, v in gb_example.items()}
+    else:
+        gb_shapes = graph_block(engine.pg, as_spec=True)
+    if engine.backend == "local":
+        import functools
+        fn = functools.partial(engine._run_batched, num_queries=num_queries)
+    else:
+        fn = engine._sharded_fn(num_queries=num_queries,
+                                gb_example=gb_example)
+    return jax.make_jaxpr(fn)(gb_shapes)
+
+
+def verify_jaxpr(closed_jaxpr, mesh_axes: Optional[Dict[str, int]] = None):
+    """Run the Pass 1 walk over a ClosedJaxpr. ``mesh_axes`` seeds the
+    bound-axis environment for jaxprs NOT wrapped in a shard_map eqn (a
+    shard_map inside the jaxpr binds its own mesh on entry).
+
+    Returns (CollectiveSummary, [Violation])."""
+    w = _Walker(mesh_axes or {})
+    w.walk(closed_jaxpr.jaxpr)
+    return (CollectiveSummary(collectives=w.collectives, conds=w.conds,
+                              mesh_axes=dict(mesh_axes or {})),
+            w.violations)
+
+
+def verify_collectives(engine, num_queries: Optional[int] = None,
+                       gb_example=None):
+    """Pass 1 over one engine configuration: trace the loop, walk the
+    jaxpr, and check the tier plan's staticness. Returns
+    (CollectiveSummary, [Violation])."""
+    violations = check_plan_static(getattr(engine, "tier_plan", None))
+    if violations:
+        # a non-static plan cannot be traced meaningfully — report it
+        # instead of crashing inside make_jaxpr with an opaque error
+        return CollectiveSummary([], [], {}), violations
+    mesh_axes = {}
+    if engine.backend == "shard_map" and engine.mesh is not None:
+        mesh_axes = dict(engine.mesh.shape)
+    jaxpr = trace_loop(engine, num_queries=num_queries,
+                       gb_example=gb_example)
+    summary, vs = verify_jaxpr(jaxpr, mesh_axes=mesh_axes)
+    summary.mesh_axes = mesh_axes
+    return summary, violations + vs

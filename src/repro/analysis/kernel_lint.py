@@ -1,0 +1,450 @@
+"""Gopher Sentinel Pass 3: the Pallas kernel linter.
+
+AST-level checks over the repo's Pallas kernels (``kernels/ops.py``,
+``outbox_compact.py``, ``semiring_spmv.py``) for the four failure modes
+that bit the pack/sweep path during development and that no runtime test
+catches reliably (they only corrupt the padded tail, which the wrapper
+slice usually hides — until a block boundary moves):
+
+- **grid divisibility** (``PALLAS_GRID_DIVISIBILITY``): every grid
+  dimension fed to ``pl.pallas_call`` must be an exact multiple count —
+  the repo's idiom is the ceil-pad ``r_pad = -(-r // br) * br`` followed
+  by ``grid = (r_pad // br,)``. A grid built from an *unpadded* size
+  silently drops the ragged tail rows (Pallas truncates the last block's
+  index map, it does not mask it).
+- **unmasked stores** (``PALLAS_UNMASKED_STORE``): an output ref written
+  only under ``@pl.when(c)`` with no complementary ``@pl.when(~c)`` or
+  unconditional store leaves every lane of a predicated-off block
+  uninitialized VMEM garbage, which escapes through the wrapper's
+  ``[:r]`` slice whenever the garbage block is not the last one.
+- **mask-multiply on values** (``PALLAS_MASK_MULTIPLY``): ``mask * vals``
+  where ``vals`` came out of a ref is NOT a select — an active ±inf
+  message (legal under min/max ⊕) times a 0.0 mask lane is NaN, and NaN
+  poisons every reduction it meets. The pack kernels select with
+  ``jnp.where(mask, vals, ident)`` instead; multiplying a mask into an
+  iota (slot ids) is exempt — those are finite by construction.
+- **reductions over unselected ref data** (``REDUCE_UNMASKED``, warning):
+  ``jnp.min/max/sum`` over values gathered from a ref without a
+  ``jnp.where`` select lets pad lanes (±inf / stale VMEM) into the fold.
+- **input/output aliasing races** (``IO_ALIAS``): ``input_output_aliases``
+  makes an input ref and an output ref the same buffer; a read of the
+  input after the first write to its aliased output observes clobbered
+  data within the block (and across blocks for any non-identity index
+  map). No repo kernel aliases today; the rule keeps it that way unless
+  someone proves the ordering.
+
+The linter is intraprocedural with a small provenance lattice (``refread``
+/ ``mask`` / ``iota`` / ``selected`` tags flowing through assignments), so
+it stays exact on the repo's branch-free kernels while catching each
+seeded negative with the offending file:line and kernel name.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.report import ERROR, WARNING, Violation
+
+_REDUCES = {"min", "max", "sum", "amin", "amax", "nanmin", "nanmax"}
+_IOTA_FNS = {"broadcasted_iota", "iota", "arange"}
+
+
+def _unparse(node) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return ast.dump(node)
+
+
+def _is_ceil_pad(expr, divisor) -> bool:
+    """Match ``-(-X // B) * B`` with B == divisor (textually)."""
+    if not (isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Mult)):
+        return False
+    left, right = expr.left, expr.right
+    if _unparse(right) != _unparse(divisor):
+        return False
+    if not (isinstance(left, ast.UnaryOp) and isinstance(left.op, ast.USub)):
+        return False
+    inner = left.operand
+    return (isinstance(inner, ast.BinOp)
+            and isinstance(inner.op, ast.FloorDiv)
+            and isinstance(inner.left, ast.UnaryOp)
+            and isinstance(inner.left.op, ast.USub)
+            and _unparse(inner.right) == _unparse(divisor))
+
+
+def _call_attr(node) -> Optional[str]:
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id
+    return None
+
+
+class _KernelLinter:
+    """Lints one kernel function: provenance tags + store coverage."""
+
+    def __init__(self, fn: ast.FunctionDef, filename: str):
+        self.fn = fn
+        self.filename = filename
+        self.ref_params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+                           if a.arg.endswith("_ref")}
+        self.env: Dict[str, Set[str]] = {}
+        self.violations: List[Violation] = []
+        # ref name -> list of (when_cond_src | None, lineno)
+        self.stores: Dict[str, List] = {}
+
+    def _where(self, node) -> str:
+        return f"{self.filename}:{node.lineno} (kernel {self.fn.name})"
+
+    # -------- provenance --------
+    def tags(self, e) -> Set[str]:
+        if isinstance(e, ast.Name):
+            return set(self.env.get(e.id, ()))
+        if isinstance(e, ast.Subscript):
+            base = e.value
+            if isinstance(base, ast.Name) and base.id in self.ref_params:
+                return {"refread"}
+            return self.tags(base)
+        if isinstance(e, ast.Compare):
+            return {"mask"}
+        if isinstance(e, (ast.Tuple, ast.List)):
+            out = set()
+            for el in e.elts:
+                out |= self.tags(el)
+            return out
+        if isinstance(e, ast.UnaryOp):
+            return self.tags(e.operand)
+        if isinstance(e, ast.BinOp):
+            t = self.tags(e.left) | self.tags(e.right)
+            if isinstance(e.op, (ast.BitAnd, ast.BitOr)):
+                t |= {"mask"}
+            return t
+        if isinstance(e, ast.Call):
+            attr = _call_attr(e)
+            if attr in _IOTA_FNS:
+                return {"iota"}
+            if attr == "where" and len(e.args) >= 3:
+                return ({"selected"} | self.tags(e.args[1])
+                        | self.tags(e.args[2])) - {"mask"}
+            if attr in ("astype", "reshape", "take"):
+                t = set()
+                if isinstance(e.func, ast.Attribute):
+                    t |= self.tags(e.func.value)
+                for a in e.args:
+                    t |= self.tags(a)
+                return t
+            t = set()
+            for a in e.args:
+                t |= self.tags(a)
+            if isinstance(e.func, ast.Attribute):
+                t |= self.tags(e.func.value)
+            return t
+        if isinstance(e, ast.IfExp):
+            return self.tags(e.body) | self.tags(e.orelse)
+        return set()
+
+    # -------- statement walk --------
+    def run(self) -> List[Violation]:
+        self._walk_body(self.fn.body, when_cond=None)
+        self._check_store_coverage()
+        return self.violations
+
+    def _walk_body(self, body, when_cond) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.FunctionDef):
+                cond = self._when_cond(stmt)
+                self._walk_body(stmt.body,
+                                when_cond=cond if cond is not None
+                                else when_cond)
+                continue
+            if isinstance(stmt, (ast.If, ast.For, ast.While, ast.With)):
+                self._walk_body(stmt.body, when_cond)
+                self._walk_body(getattr(stmt, "orelse", []), when_cond)
+                continue
+            if isinstance(stmt, ast.Assign):
+                self._check_expr(stmt.value)
+                t = self.tags(stmt.value)
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.env[tgt.id] = t
+                    elif isinstance(tgt, ast.Subscript):
+                        base = tgt.value
+                        if (isinstance(base, ast.Name)
+                                and base.id in self.ref_params):
+                            self.stores.setdefault(base.id, []).append(
+                                (when_cond, stmt.lineno))
+                    elif isinstance(tgt, ast.Tuple):
+                        for el in tgt.elts:
+                            if isinstance(el, ast.Name):
+                                self.env[el.id] = t
+            elif isinstance(stmt, ast.Expr):
+                self._check_expr(stmt.value)
+
+    def _when_cond(self, fn: ast.FunctionDef) -> Optional[str]:
+        """The pl.when predicate this inner function runs under (source
+        text), or None if it is not a pl.when body."""
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call) and _call_attr(dec) == "when":
+                return _unparse(dec.args[0]) if dec.args else ""
+        return None
+
+    # -------- expression rules --------
+    def _check_expr(self, e) -> None:
+        for node in ast.walk(e):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+                lt, rt = self.tags(node.left), self.tags(node.right)
+                for mt, vt, vnode in ((lt, rt, node.right),
+                                      (rt, lt, node.left)):
+                    if ("mask" in mt and "refread" in vt
+                            and "iota" not in vt and "selected" not in vt):
+                        self.violations.append(Violation(
+                            pass_name="kernels", code="PALLAS_MASK_MULTIPLY",
+                            where=self._where(node),
+                            detail=(f"`{_unparse(node)}` multiplies a 0/1 "
+                                    "mask into values read from a ref: if "
+                                    "a masked-out lane holds ±inf (legal "
+                                    "under min/max ⊕) the product is NaN "
+                                    "and poisons the reduction. Select "
+                                    "instead: jnp.where(mask, "
+                                    f"{_unparse(vnode)}, identity)"),
+                            severity=ERROR))
+                        break
+            elif isinstance(node, ast.Call):
+                attr = _call_attr(node)
+                if attr in _REDUCES and node.args:
+                    t = self.tags(node.args[0])
+                    if "refread" in t and "selected" not in t:
+                        self.violations.append(Violation(
+                            pass_name="kernels", code="REDUCE_UNMASKED",
+                            where=self._where(node),
+                            detail=(f"`{_unparse(node)[:80]}` reduces over "
+                                    "values gathered from a ref with no "
+                                    "jnp.where select on the reduced "
+                                    "operand — pad/invalid lanes (±inf, "
+                                    "stale VMEM) enter the fold; mask "
+                                    "with jnp.where(valid, x, identity) "
+                                    "first"),
+                            severity=WARNING))
+
+    # -------- store coverage rule --------
+    def _check_store_coverage(self) -> None:
+        for ref, events in self.stores.items():
+            if any(cond is None for cond, _ in events):
+                continue                        # unconditional write exists
+            conds = [c for c, _ in events]
+            covered = False
+            for c in conds:
+                neg = f"~{c}" if not c.startswith("~") else c[1:]
+                # accept ~(c) spelled with or without parens
+                alts = {neg, f"~({c})" if not c.startswith("~") else neg}
+                if any(o in alts or o.replace("(", "").replace(")", "")
+                       in {a.replace("(", "").replace(")", "")
+                           for a in alts} for o in conds if o != c):
+                    covered = True
+                    break
+            if not covered:
+                lines = ", ".join(str(ln) for _, ln in events)
+                self.violations.append(Violation(
+                    pass_name="kernels", code="PALLAS_UNMASKED_STORE",
+                    where=(f"{self.filename}:{events[0][1]} "
+                           f"(kernel {self.fn.name}, output {ref})"),
+                    detail=(f"{ref} is written only under "
+                            f"@pl.when({conds[0]}) (lines {lines}) with no "
+                            "complementary @pl.when(~...) or "
+                            "unconditional store: blocks where the "
+                            "predicate is false leave the output lanes "
+                            "as uninitialized VMEM, which escapes the "
+                            "wrapper's [:r] slice for any non-final "
+                            "block. Add the complementary branch writing "
+                            "the ⊕ identity"),
+                    severity=ERROR))
+
+
+class _WrapperLinter:
+    """Lints one wrapper function's pallas_call sites: grid divisibility
+    and input/output aliasing."""
+
+    def __init__(self, fn: ast.FunctionDef, filename: str,
+                 module_fns: Dict[str, ast.FunctionDef]):
+        self.fn = fn
+        self.filename = filename
+        self.module_fns = module_fns
+        self.assigns: Dict[str, ast.expr] = {}
+        self.violations: List[Violation] = []
+
+    def run(self) -> List[Violation]:
+        for stmt in ast.walk(self.fn):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                self.assigns[stmt.targets[0].id] = stmt.value
+        for node in ast.walk(self.fn):
+            if (isinstance(node, ast.Call)
+                    and _call_attr(node) == "pallas_call"):
+                self._check_site(node)
+        return self.violations
+
+    def _where(self, node) -> str:
+        return f"{self.filename}:{node.lineno} (wrapper {self.fn.name})"
+
+    def _resolve(self, e):
+        seen = set()
+        while isinstance(e, ast.Name) and e.id in self.assigns \
+                and e.id not in seen:
+            seen.add(e.id)
+            e = self.assigns[e.id]
+        return e
+
+    def _kwarg(self, call, name):
+        for kw in call.keywords:
+            if kw.arg == name:
+                return kw.value
+        return None
+
+    def _check_site(self, call: ast.Call) -> None:
+        self._check_grid(call)
+        self._check_alias(call)
+
+    def _check_grid(self, call: ast.Call) -> None:
+        grid = self._kwarg(call, "grid")
+        if grid is None:
+            return
+        grid = self._resolve(grid)
+        dims = grid.elts if isinstance(grid, (ast.Tuple, ast.List)) else [grid]
+        for dim in dims:
+            dim_r = self._resolve(dim)
+            if isinstance(dim_r, ast.Constant):
+                continue                # static grid: shapes are literal too
+            ok = False
+            if (isinstance(dim_r, ast.BinOp)
+                    and isinstance(dim_r.op, ast.FloorDiv)):
+                num = self._resolve(dim_r.left)
+                div = dim_r.right
+                if _is_ceil_pad(num, div):
+                    ok = True
+                elif (isinstance(num, ast.Constant)
+                      and isinstance(self._resolve(div), ast.Constant)
+                      and isinstance(num.value, int)):
+                    d = self._resolve(div).value
+                    ok = isinstance(d, int) and d > 0 and num.value % d == 0
+            if not ok:
+                self.violations.append(Violation(
+                    pass_name="kernels", code="PALLAS_GRID_DIVISIBILITY",
+                    where=self._where(call),
+                    detail=(f"grid dimension `{_unparse(dim)}` is not "
+                            "provably an exact block count: the numerator "
+                            "is not the ceil-pad of its divisor "
+                            "(`x_pad = -(-x // b) * b` then "
+                            "`grid = (x_pad // b,)`). A ragged size "
+                            "silently truncates the trailing rows — pad "
+                            "the operands to x_pad and slice [:x] after "
+                            "the call"),
+                    severity=ERROR))
+
+    def _check_alias(self, call: ast.Call) -> None:
+        alias = self._kwarg(call, "input_output_aliases")
+        if alias is None:
+            return
+        pairs = []
+        if isinstance(alias, ast.Dict):
+            for k, v in zip(alias.keys, alias.values):
+                if isinstance(k, ast.Constant) and isinstance(v, ast.Constant):
+                    pairs.append((k.value, v.value))
+        kern = self._kernel_fn(call)
+        in_specs = self._kwarg(call, "in_specs")
+        n_in = (len(in_specs.elts)
+                if isinstance(in_specs, (ast.Tuple, ast.List)) else None)
+        if kern is None or n_in is None or not pairs:
+            self.violations.append(Violation(
+                pass_name="kernels", code="IO_ALIAS",
+                where=self._where(call),
+                detail=("input_output_aliases present but the kernel/spec "
+                        "mapping could not be resolved statically; aliased "
+                        "buffers share memory across the grid — verify "
+                        "read-before-write ordering by hand"),
+                severity=WARNING))
+            return
+        params = [a.arg for a in kern.args.posonlyargs + kern.args.args]
+        for in_idx, out_idx in pairs:
+            if in_idx >= len(params) or n_in + out_idx >= len(params):
+                continue
+            in_ref, out_ref = params[in_idx], params[n_in + out_idx]
+            reads = [n.lineno for n in ast.walk(kern)
+                     if isinstance(n, ast.Subscript)
+                     and isinstance(n.value, ast.Name)
+                     and n.value.id == in_ref
+                     and isinstance(n.ctx, ast.Load)]
+            writes = [n.lineno for n in ast.walk(kern)
+                      if isinstance(n, ast.Subscript)
+                      and isinstance(n.value, ast.Name)
+                      and n.value.id == out_ref
+                      and isinstance(n.ctx, ast.Store)]
+            late = [r for r in reads if writes and r > min(writes)]
+            if late:
+                self.violations.append(Violation(
+                    pass_name="kernels", code="IO_ALIAS",
+                    where=(f"{self.filename}:{late[0]} "
+                           f"(kernel {kern.name})"),
+                    detail=(f"{in_ref} is aliased onto {out_ref} "
+                            "(input_output_aliases) but is read at line "
+                            f"{late[0]} AFTER {out_ref} is first written "
+                            f"at line {min(writes)} — the read observes "
+                            "the clobbered output buffer. Read the input "
+                            "fully before the first aliased store, or "
+                            "drop the alias"),
+                    severity=ERROR))
+
+    def _kernel_fn(self, call: ast.Call) -> Optional[ast.FunctionDef]:
+        if not call.args:
+            return None
+        target = call.args[0]
+        if isinstance(target, ast.Call) and target.args:
+            # functools.partial(_kern, ...)
+            target = target.args[0]
+        if isinstance(target, ast.Name):
+            return self.module_fns.get(target.id)
+        return None
+
+
+def lint_source(src: str, filename: str = "<string>") -> List[Violation]:
+    """Run Pass 3 over one module's source. Kernel functions are those
+    with ``*_ref`` parameters; wrapper functions are those containing a
+    ``pallas_call``."""
+    try:
+        tree = ast.parse(src, filename=filename)
+    except SyntaxError as e:
+        return [Violation(
+            pass_name="kernels", code="PARSE_ERROR",
+            where=f"{filename}:{e.lineno or 0}",
+            detail=f"cannot parse: {e.msg}", severity=ERROR)]
+    module_fns = {n.name: n for n in ast.walk(tree)
+                  if isinstance(n, ast.FunctionDef)}
+    out: List[Violation] = []
+    for fn in module_fns.values():
+        params = {a.arg for a in fn.args.posonlyargs + fn.args.args}
+        if any(p.endswith("_ref") for p in params):
+            out.extend(_KernelLinter(fn, filename).run())
+        if any(isinstance(n, ast.Call) and _call_attr(n) == "pallas_call"
+               for n in ast.walk(fn)):
+            out.extend(_WrapperLinter(fn, filename, module_fns).run())
+    return out
+
+
+def lint_kernel_file(path: str) -> List[Violation]:
+    with open(path, "r") as f:
+        return lint_source(f.read(), filename=os.path.basename(path))
+
+
+def lint_kernels(paths: Optional[List[str]] = None) -> List[Violation]:
+    """Pass 3 over the repo's Pallas kernel modules (default: ops.py,
+    outbox_compact.py, semiring_spmv.py)."""
+    if paths is None:
+        import repro.kernels as _k
+        base = os.path.dirname(_k.__file__)
+        paths = [os.path.join(base, n)
+                 for n in ("ops.py", "outbox_compact.py", "semiring_spmv.py")]
+    out: List[Violation] = []
+    for p in paths:
+        out.extend(lint_kernel_file(p))
+    return out

@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)

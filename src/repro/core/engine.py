@@ -164,7 +164,8 @@ class GopherEngine:
                  max_supersteps: int = 4096, gb: Optional[dict] = None,
                  exchange: str = "auto", tier_plan: Optional[TierPlan] = None,
                  tracer: Optional["obs_trace.Tracer"] = None,
-                 metrics: Optional["obs_metrics.MetricsRegistry"] = None):
+                 metrics: Optional["obs_metrics.MetricsRegistry"] = None,
+                 validate: bool = False):
         assert backend in ("local", "shard_map")
         assert exchange in ("auto", "compact", "dense", "tiered", "phased")
         if backend == "shard_map":
@@ -221,6 +222,12 @@ class GopherEngine:
         # the tracer is enabled.
         self._tracer = tracer
         self._metrics = metrics
+        # Gopher Sentinel: validate=True runs the static passes (SPMD
+        # collective verification + semiring laws + plan staticness, see
+        # repro.analysis) on every compiled-loop cache MISS, before the
+        # loop enters the cache — a cache hit means an identical
+        # configuration already passed, so warm paths pay nothing.
+        self.validate = validate
 
     @property
     def tracer(self) -> "obs_trace.Tracer":
@@ -1240,6 +1247,12 @@ class GopherEngine:
         exchange = exchange or self.exchange
         tier_plan = (self.tier_plan if exchange in ("tiered", "phased")
                      else None)
+        if tier_plan is not None and getattr(self, "validate", False):
+            # a non-static plan would blow up the cache-key hash below
+            # with a bare TypeError — vet it first so the failure names
+            # the offending field instead
+            from repro.analysis import assert_clean, check_plan_static
+            assert_clean(check_plan_static(tier_plan))
         gb_sig = (tuple(sorted((k, v.shape, str(v.dtype))
                                for k, v in gb_example.items()))
                   if gb_example is not None else None)
@@ -1264,6 +1277,13 @@ class GopherEngine:
             slim.axis_name = self.axis_name
             slim.max_supersteps = self.max_supersteps
             slim._gb = None
+            if getattr(self, "validate", False):
+                # Gopher Sentinel gate: verify the exact loop about to be
+                # compiled (the slim engine IS that loop's closure) before
+                # it can enter the cache. Raises SentinelError on findings.
+                from repro.analysis import validate_engine
+                validate_engine(slim, num_queries=num_queries,
+                                gb_example=gb_example)
             if self.backend == "local":
                 cached = jax.jit(functools.partial(
                     slim._run_batched, num_queries=num_queries))
@@ -1400,7 +1420,6 @@ class GopherEngine:
         gb_specs = graph_block(self.pg, as_spec=True)
         gb_pspec = jax.tree.map(lambda _: spec, gb_specs)
         prog = self.program
-        ident = msg.COMBINE_IDENTITY[prog.combine]
 
         state_shapes = jax.eval_shape(
             lambda g: jax.vmap(prog.init)(g), gb_specs)

@@ -13,7 +13,6 @@ framework's mailbox IS the expert all_to_all), per DESIGN.md §6.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -60,7 +59,6 @@ def combine_inbox(in_vals: jnp.ndarray, in_idx: jnp.ndarray, v_max: int,
     in_vals/in_idx: (num_src, cap) from all source partitions. PAD indices map
     out-of-range and are dropped by the scatter.
     """
-    ident = COMBINE_IDENTITY[combine]
     idx = in_idx.reshape(-1)
     idx = jnp.where(idx == PAD, v_max, idx).astype(jnp.int32)
     seg = _SEGMENT[combine](in_vals.reshape(-1), idx, num_segments=v_max + 1)

@@ -87,7 +87,20 @@ def occupancy_from_graph(pg) -> np.ndarray:
 @dataclasses.dataclass(frozen=True)
 class TierPlan:
     """Static per-pair tier assignment. Hashable — the engine's compiled-loop
-    cache keys on it, so two engines with the same plan share one compile."""
+    cache keys on it, so two engines with the same plan share one compile.
+
+    Invariants (enforced by ``repro.analysis.check_plan_static``, run by the
+    Gopher Sentinel and by ``GopherEngine(validate=True)`` before a plan may
+    key ``_RUNNER_CACHE``):
+
+    * every field is a TRACE-TIME CONSTANT — plain ``int``/``bytes``, never
+      a jax tracer or array. The tier table selects which collectives the
+      loop emits, so a non-constant table would bake one engine's routing
+      into a cache entry other engines silently share (or fail to hash);
+    * ``tier_bytes`` has exactly ``num_parts**2`` entries — the (P, P)
+      row-major pair table the pack/exchange stages index;
+    * the instance hashes and compares equal under
+      ``dataclasses.replace(plan)`` — value semantics, not identity."""
     num_parts: int
     cap: int
     warm_cap: int
@@ -261,7 +274,18 @@ class PhasedTierPlan:
     per-pair counts under the next phase's caps for ``DEMOTE_STREAK``
     consecutive supersteps) — and repairs any phase that truncated with a
     per-superstep dense retry plus a per-phase escalation
-    (:meth:`escalate_phase`)."""
+    (:meth:`escalate_phase`).
+
+    Shares :class:`TierPlan`'s staticness invariants (checked by
+    ``repro.analysis.check_plan_static``): all fields trace-time-constant
+    and hashable, each ``phase_tier_bytes[k]`` exactly ``num_parts**2``
+    long, one boundary per phase with predicted ends strictly increasing
+    and only the last phase open-ended (``_NO_BOUNDARY``). The dense-retry
+    repair path additionally requires an IDEMPOTENT ⊕ for bit-exactness —
+    re-delivering a truncated round must not double-count — which the
+    sentinel's semiring pass checks against each program's declared
+    algebra (non-idempotent ⊕ like pagerank's ``sum`` is flagged
+    allclose-only)."""
     num_parts: int
     cap: int
     warm_cap: int

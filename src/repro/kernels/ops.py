@@ -12,8 +12,7 @@ results scatter back by row index.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,7 @@ import numpy as np
 from repro.gofs.formats import PAD
 from repro.kernels.outbox_compact import (outbox_compact_plan_pallas,
                                           outbox_pack_pallas)
-from repro.kernels.ref import (SEMIRINGS, outbox_compact_plan_ref,
+from repro.kernels.ref import (outbox_compact_plan_ref,
                                outbox_pack_ref, semiring_spmv_frontier_ref,
                                semiring_spmv_ref)
 from repro.kernels.semiring_spmv import (semiring_spmv_frontier_pallas,
@@ -214,7 +213,6 @@ def bin_rows_by_degree(nbr: np.ndarray, wgt: np.ndarray,
 def multibin_spmv(x: jnp.ndarray, bins: list, v_out: int, semiring: str,
                   backend: Optional[str] = None) -> jnp.ndarray:
     """Semiring sweep over degree-binned ELL; scatter bin results to rows."""
-    from repro.core.messages import COMBINE_IDENTITY
     ident = {"min_plus": jnp.inf, "max_first": -jnp.inf, "plus_times": 0.0}[semiring]
     y = jnp.full((v_out,), ident, x.dtype)
     for rows, nbr_b, wgt_b in bins:

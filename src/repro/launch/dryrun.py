@@ -23,7 +23,7 @@ from repro.configs import ARCHS, get_config
 from repro.launch import roofline as R
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
-from repro.models.sharding import clear_rules, set_rules
+from repro.models.sharding import set_rules
 from repro.training import optimizer as O
 from repro.training.shardspec import batch_pspecs, cache_pspecs, param_pspecs, state_pspecs
 from repro.training.train_step import make_decode_step, make_prefill_step, make_train_step
@@ -126,7 +126,6 @@ def graph_dryrun(multi_pod: bool = False, n_vertices: int = 262_144,
     from repro.core import GopherEngine, SemiringProgram, init_max_vertex
     from repro.gofs import road_grid, bfs_grow_partition
     from repro.gofs.formats import partition_graph
-    from repro.launch import hloparse
     from repro.launch.mesh import make_mesh
 
     chips = 512 if multi_pod else 256

@@ -37,6 +37,8 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=(\{(?:\{[\d,]*\},?)*\}|\[[\d,]*\]<=\[[\d,]*\])")
 
 
 def _balanced(s: str, start: int) -> int:
@@ -99,6 +101,40 @@ def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
         total += n * _DTYPE_BYTES[dt]
         shapes.append((dt, dl))
     return total, shapes
+
+
+def _parse_pairs(attrs: str) -> Optional[Tuple[Tuple[int, int], ...]]:
+    """collective-permute ``source_target_pairs={{0,1},{1,2}}`` -> tuples."""
+    m = _PAIRS_RE.search(attrs)
+    if not m:
+        return None
+    return tuple((int(a), int(b))
+                 for a, b in re.findall(r"\{(\d+),(\d+)\}", m.group(1)))
+
+
+def _parse_groups(attrs: str) -> Optional[str]:
+    """``replica_groups=`` in either the brace or iota (``[2,2]<=[4]``)
+    form, kept as the raw string (group topology is compared textually)."""
+    m = _GROUPS_RE.search(attrs)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class CollectiveInstr:
+    """One collective instruction in the compiled module, with the while
+    trip-count multiplier it executes under (the sentinel↔HLO cross-check
+    compares these against the jaxpr-level CollectiveSummary)."""
+    kind: str                     # all-reduce | all-to-all | collective-permute | ...
+    name: str                     # HLO instruction name
+    computation: str              # enclosing computation
+    result_bytes: int
+    mult: int                     # product of enclosing while trip counts
+    source_target_pairs: Optional[Tuple[Tuple[int, int], ...]] = None
+    replica_groups: Optional[str] = None
+
+    @property
+    def total_bytes(self) -> int:
+        return self.result_bytes * self.mult
 
 
 @dataclasses.dataclass
@@ -343,6 +379,58 @@ class Analyzer:
                     tot["hbm"] += mult * sub["hbm"]
         return tot
 
+    def collective_trace(self, name: Optional[str] = None,
+                         _mult: int = 1) -> List[CollectiveInstr]:
+        """Every collective instruction reachable from ``name`` (default:
+        the entry computation), each with its while trip-count multiplier,
+        permutation table (collective-permute) and replica groups. Async
+        pairs are recorded once, on the ``-start`` (that's where XLA keeps
+        the attrs); the ``-done`` half is skipped."""
+        if name is None:
+            name = (self.entry if self.entry in self.comps
+                    else max(self.comps,
+                             key=lambda c: len(self.comps[c].order)))
+        comp = self.comps.get(name)
+        out: List[CollectiveInstr] = []
+        if comp is None:
+            return out
+        for opn in comp.order:
+            op = comp.ops[opn]
+            oc = op.opcode
+            base = oc.split("-start")[0].split("-done")[0]
+            if base in _COLLECTIVES:
+                if oc.endswith("-done"):
+                    continue
+                out.append(CollectiveInstr(
+                    kind=base, name=op.name, computation=name,
+                    result_bytes=op.result_bytes, mult=_mult,
+                    source_target_pairs=_parse_pairs(op.attrs),
+                    replica_groups=_parse_groups(op.attrs)))
+                continue
+            if oc == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                trips = self.trip_count(mc.group(1)) if mc else 1
+                if mb:
+                    out += self.collective_trace(mb.group(1), _mult * trips)
+            elif oc in ("fusion", "call", "conditional", "custom-call",
+                        "async-start"):
+                for s in self._called(op):
+                    out += self.collective_trace(s, _mult)
+        return out
+
+    def collective_report(self) -> Dict[str, dict]:
+        """Per-kind byte/count rollup of :meth:`collective_trace` —
+        ``{kind: {count, bytes, instrs}}`` with trip multipliers applied."""
+        rep: Dict[str, dict] = {}
+        for ci in self.collective_trace():
+            slot = rep.setdefault(ci.kind,
+                                  {"count": 0, "bytes": 0, "instrs": []})
+            slot["count"] += ci.mult
+            slot["bytes"] += ci.total_bytes
+            slot["instrs"].append(ci)
+        return rep
+
     def analyze(self) -> dict:
         # entry computation name in post-opt HLO text
         if self.entry and self.entry in self.comps:
@@ -357,3 +445,11 @@ def analyze_text(text: str) -> dict:
     out = a.analyze()
     out["coll_bytes_total"] = sum(out["coll"].values())
     return out
+
+
+def collective_trace(text: str) -> List[CollectiveInstr]:
+    return Analyzer(text).collective_trace()
+
+
+def collective_report(text: str) -> Dict[str, dict]:
+    return Analyzer(text).collective_report()

@@ -10,7 +10,6 @@ compiled HLO, with while-trip multipliers (the §Perf iteration workflow).
 import argparse
 import re
 
-import jax
 
 
 def walk_multipliers(analyzer):

@@ -4,7 +4,6 @@ decoder with causal self-attention + cross-attention. LayerNorm + GELU + learned
 positions (whisper-style), biases on projections."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ applications — Zamba2's parameter sharing; each application keeps its own KV
 cache)."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -148,7 +147,10 @@ def decode_step(params, token, cache, cfg, positions=None):
             x, params["shared_attn"], cfg, pos,
             cache=(cache["attn_k"][gi], cache["attn_v"][gi]),
             slot=pos_scalar, pos_scalar=pos_scalar)
-        convs.append(cv); ssms.append(sm); aks.append(ak); avs.append(av)
+        convs.append(cv)
+        ssms.append(sm)
+        aks.append(ak)
+        avs.append(av)
     x, (cv_t, sm_t) = _mamba_scan(x, rest, cfg,
                                   states={"conv": cache["conv"][n_h:],
                                           "ssm": cache["ssm"][n_h:]})
@@ -172,7 +174,8 @@ def prefill(params, tokens, cfg, max_seq=None, positions=None):
     g, head, rest = _split_groups(params["blocks"][0], cfg)
     cache = init_cache(cfg, B, max_seq, dtype)
     convs, ssms = [], []
-    ak = cache["attn_k"]; av = cache["attn_v"]
+    ak = cache["attn_k"]
+    av = cache["attn_v"]
     for gi in range(g):
         grp = jax.tree.map(lambda a: a[gi], head)
         x, (cv, sm) = _mamba_scan(x, grp, cfg, states={
@@ -181,11 +184,13 @@ def prefill(params, tokens, cfg, max_seq=None, positions=None):
         x, (k, v) = _shared_block(x, params["shared_attn"], cfg, pos)
         ak = ak.at[gi, :, :S].set(k.astype(dtype))
         av = av.at[gi, :, :S].set(v.astype(dtype))
-        convs.append(cv); ssms.append(sm)
+        convs.append(cv)
+        ssms.append(sm)
     x, (cv_t, sm_t) = _mamba_scan(x, rest, cfg, states={
         "conv": jnp.zeros_like(cache["conv"][g * cfg.attn_every:]),
         "ssm": jnp.zeros_like(cache["ssm"][g * cfg.attn_every:])})
-    convs.append(cv_t); ssms.append(sm_t)
+    convs.append(cv_t)
+    ssms.append(sm_t)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(x, params["embed"], cfg)
     cache.update(

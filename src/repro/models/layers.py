@@ -7,9 +7,8 @@ constraints from repro.models.sharding.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -298,7 +297,7 @@ def moe_block(x, p, cfg, capacity: Optional[int] = None):
     argsort formulation costs ~3.4 TB/dev of collectives at 256 chips
     (EXPERIMENTS.md §Perf iteration M1).
     """
-    from repro.models.sharding import active_mesh, rule_axes
+    from repro.models.sharding import active_mesh
     mesh = active_mesh()
     if mesh is not None and "model" in mesh.axis_names \
             and cfg.moe.n_experts % mesh.shape["model"] == 0:

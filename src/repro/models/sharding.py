@@ -13,7 +13,7 @@ active and is a no-op otherwise (CPU smoke tests).
 from __future__ import annotations
 
 import threading
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P

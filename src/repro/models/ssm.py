@@ -7,7 +7,6 @@ scan (DESIGN.md §6 hardware adaptation of the CUDA selective-scan kernel).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

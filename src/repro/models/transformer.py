@@ -8,11 +8,10 @@ sub-stacks scanned per cycle (no cond branches -> cost_analysis stays honest).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import layers as L
 from repro.models.sharding import shard, shard_params
@@ -187,7 +186,6 @@ def decode_step(params, token, cache, cfg, positions=None):
         s_cache = c["k"].shape[2]
         slot = jnp.where(jnp.int32(s_cache) >= pos_scalar + 1,
                          pos_scalar, pos_scalar % s_cache)
-        win = None if is_global else cfg.swa_window
 
         def body(x, inp):
             p, kc, vc = inp

@@ -14,7 +14,6 @@ accumulates the update in fp32 — the classic compression trick.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,10 +7,8 @@ replicated across pods and gradients all-reduce across them once per step.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.sharding import base_param_spec as _base_spec_impl

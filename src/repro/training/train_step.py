@@ -6,7 +6,6 @@ launch/train.py) via the specs in training.shardspec.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -1,6 +1,5 @@
 """GoFS store, partitioners, formats, sub-graph discovery."""
 import numpy as np
-import pytest
 import scipy.sparse as sp
 import scipy.sparse.csgraph as csgraph
 

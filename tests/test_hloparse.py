@@ -1,6 +1,5 @@
 """Scan-aware HLO analyzer: trip-count multipliers must make scanned and
 unrolled modules agree; collective parsing must find psums."""
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -52,7 +51,6 @@ def test_nested_scan_multipliers():
 
 
 def test_collectives_parsed_with_trip_count():
-    import os
     if len(jax.devices()) < 2:
         # single-device CI: the psum lowers away; just check no crash
         def f(x):
@@ -61,3 +59,82 @@ def test_collectives_parsed_with_trip_count():
             jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile().as_text())
         assert r["coll_bytes_total"] >= 0
         return
+
+
+# ---------------- collective trace (Gopher Sentinel cross-check) ----------------
+
+# Hand-written module: a while loop (trip count 5) whose body issues a
+# collective-permute, an all-to-all and an all-reduce — the three opcodes the
+# tiered/phased exchange lowers to. Deterministic on any device count.
+_COLLECTIVE_HLO = """\
+HloModule sentinel_fixture
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(f32[] %a, f32[] %b)
+}
+
+%cond (pc: (s32[], f32[4,8])) -> pred[] {
+  %pc = (s32[], f32[4,8]) parameter(0)
+  %ic = s32[] get-tuple-element((s32[], f32[4,8]) %pc), index=0
+  %c5 = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %ic, s32[] %c5), direction=LT
+}
+
+%body (pb: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %pb = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[4,8]) %pb), index=0
+  %x = f32[4,8] get-tuple-element((s32[], f32[4,8]) %pb), index=1
+  %c1 = s32[] constant(1)
+  %ni = s32[] add(s32[] %i, s32[] %c1)
+  %cp = f32[4,8] collective-permute(f32[4,8] %x), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %a2a = f32[4,8] all-to-all(f32[4,8] %cp), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[4,8] all-reduce(f32[4,8] %a2a), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[4,8]) tuple(s32[] %ni, f32[4,8] %ar)
+}
+
+ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+  %px = f32[4,8] parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[4,8]) tuple(s32[] %c0, f32[4,8] %px)
+  %w = (s32[], f32[4,8]) while((s32[], f32[4,8]) %init), condition=%cond, body=%body
+  ROOT %out = f32[4,8] get-tuple-element((s32[], f32[4,8]) %w), index=1
+}
+"""
+
+
+def test_collective_trace_permute_and_all_to_all():
+    from repro.launch.hloparse import collective_report, collective_trace
+    trace = collective_trace(_COLLECTIVE_HLO)
+    by_kind = {c.kind: c for c in trace}
+    assert set(by_kind) == {"collective-permute", "all-to-all", "all-reduce"}
+    cp = by_kind["collective-permute"]
+    # permutation table parsed, trip-count multiplier applied
+    assert cp.source_target_pairs == ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert cp.mult == 5 and cp.result_bytes == 4 * 8 * 4
+    assert cp.total_bytes == 5 * 128
+    assert by_kind["all-to-all"].replica_groups == "{{0,1,2,3}}"
+    rep = collective_report(_COLLECTIVE_HLO)
+    assert rep["collective-permute"]["count"] == 5
+    assert rep["collective-permute"]["bytes"] == 5 * 128
+    assert rep["all-to-all"]["bytes"] == 5 * 128
+    assert rep["all-reduce"]["count"] == 5
+
+
+def test_collective_trace_async_counted_once():
+    from repro.launch.hloparse import collective_trace
+    text = """\
+HloModule async_fixture
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %px = f32[8] parameter(0)
+  %cps = (f32[8], f32[8]) collective-permute-start(f32[8] %px), source_target_pairs={{0,1},{1,0}}
+  ROOT %cpd = f32[8] collective-permute-done((f32[8], f32[8]) %cps)
+}
+"""
+    trace = collective_trace(text)
+    # the -start/-done pair is one logical collective, attrs live on -start
+    assert len(trace) == 1
+    assert trace[0].kind == "collective-permute"
+    assert trace[0].source_target_pairs == ((0, 1), (1, 0))

@@ -10,7 +10,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.gofs.formats import PAD
-from repro.kernels import (bin_rows_by_degree, multibin_spmv, semiring_spmv,
+from repro.kernels import (bin_rows_by_degree, multibin_spmv,
                            semiring_spmv_pallas, semiring_spmv_ref)
 
 SEMIRINGS = ["min_plus", "max_first", "plus_times"]
@@ -59,7 +59,9 @@ def test_vmap_over_partitions():
     xs, nbrs, wgts = [], [], []
     for _ in range(P):
         x, nbr, wgt = _random_ell(rng, v, d)
-        xs.append(x); nbrs.append(nbr); wgts.append(wgt)
+        xs.append(x)
+        nbrs.append(nbr)
+        wgts.append(wgt)
     xs, nbrs, wgts = map(np.stack, (xs, nbrs, wgts))
     got = jax.vmap(lambda a, b, c: semiring_spmv_pallas(a, b, c, "min_plus",
                                                         block_v=16))(

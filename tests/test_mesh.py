@@ -28,7 +28,6 @@ import jax.numpy as jnp
 from repro.core import (GopherEngine, PageRankProgram, SemiringProgram,
                         TierPlan, compat, device_block, host_graph_block,
                         init_max_vertex, make_sssp_init, update_profile)
-from repro.core import messages as msg
 from repro.core.tiers import (COLD, EXCLUDED, HOT, WARM,
                               occupancy_from_graph, occupancy_from_ob_inv)
 from repro.gofs import EdgeDelta, apply_delta, bfs_grow_partition, road_grid

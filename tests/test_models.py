@@ -9,11 +9,10 @@ import jax.numpy as jnp
 # the fast CI lane deselects them, the tier-1 gate still runs everything
 pytestmark = pytest.mark.slow
 
-from repro.configs import ARCHS, get_config
+from repro.configs import ARCHS
 from repro.models import (decode_step, forward, init_cache, init_params,
                           param_count, prefill)
 from repro.models import layers as L
-from repro.configs.base import SSMCfg
 
 
 KEY = jax.random.PRNGKey(0)

@@ -384,12 +384,49 @@ def test_overflow_dense_retry_escalates_only_spilling_phase(road):
     assert np.array_equal(np.asarray(sd["x"]), np.asarray(st["x"]))
 
 
-def test_phased_multi_device_collectives():
-    """D=4 CPU devices (XLA flag in a subprocess): the phased exchange's
-    per-superstep lax.cond picks between two COLLECTIVE routes (dense
-    all_to_all vs tiered all_to_all + ppermute) on a psum'd replicated
-    predicate — assert bit-parity with dense on the clean plan AND on a
-    sabotaged narrow phase that forces mid-run dense retries."""
+def test_phased_multi_device_collectives_static():
+    """Gopher Sentinel replaces the old D=4 subprocess collective check:
+    trace the phased shard_map loop on an ABSTRACT 4-device mesh (no real
+    devices, no subprocess) and statically verify the SPMD invariants the
+    subprocess run could only sample — the per-superstep lax.cond picks
+    between two genuinely DIFFERENT collective routes (dense all_to_all
+    vs tiered all_to_all + ppermute), which is deadlock-free only because
+    its predicate is replicated by a full mesh-axis psum."""
+    import jax
+
+    from repro.analysis import verify_collectives
+    # P=8 over D=4 so the tier schedule has warm (ppermute) lanes, not
+    # just the hot all_to_all — same shape as the subprocess smoke below
+    g = road_grid(10, 10, drop_frac=0.05, seed=1, weighted=True)
+    pg = partition_graph(g, bfs_grow_partition(g, 8, seed=0), 8)
+    mesh = jax.sharding.AbstractMesh((("parts", 4),))
+    prog = SemiringProgram(semiring="min_plus",
+                           init_fn=make_sssp_init(int(pg.part_of[0]),
+                                                  int(pg.local_of[0])))
+    eng = GopherEngine(pg, prog, backend="shard_map", mesh=mesh,
+                       exchange="phased",
+                       tier_plan=_structural_two_phase(pg, (2, _NO_BOUNDARY)))
+    summary, violations = verify_collectives(eng)
+    assert violations == [], [str(v) for v in violations]
+    # both routes' collectives are present in the traced loop
+    counts = summary.counts
+    assert counts.get("all_to_all", 0) > 0
+    assert counts.get("ppermute", 0) > 0
+    assert counts.get("psum", 0) > 0
+    # every retry cond has mismatched branch traces (the two routes) yet is
+    # proven safe by predicate replication — the exact property the old
+    # subprocess test could only witness indirectly via bit-parity
+    assert summary.conds, "phased loop must contain the retry conds"
+    for cond in summary.conds:
+        assert not cond.branches_equal
+        assert cond.predicate_uniform and cond.safe
+
+
+def test_phased_multi_device_smoke():
+    """One end-to-end D=4 subprocess smoke (the static sentinel check above
+    covers the collective structure): a sabotaged narrow phase forces the
+    replicated cond to flip to the dense route mid-loop on every device at
+    once, and the result stays bit-identical to dense."""
     import os
     import subprocess
     import sys
@@ -400,7 +437,7 @@ from repro.core import (GopherEngine, PhasedTierPlan, SemiringProgram,
 from repro.core.tiers import COLD, _NO_BOUNDARY, occupancy_from_graph
 from repro.gofs import bfs_grow_partition, road_grid
 from repro.gofs.formats import partition_graph
-g = road_grid(14, 14, drop_frac=0.05, seed=1, weighted=True)
+g = road_grid(10, 10, drop_frac=0.05, seed=1, weighted=True)
 pg = partition_graph(g, bfs_grow_partition(g, 8, seed=0), 8)
 mesh = compat.make_mesh((4,), ("parts",))
 prog = SemiringProgram(semiring="min_plus",
@@ -409,15 +446,6 @@ prog = SemiringProgram(semiring="min_plus",
 sd, td = GopherEngine(pg, prog, backend="shard_map", mesh=mesh,
                       exchange="dense").run()
 base = TierPlan.from_graph(pg)
-plan = PhasedTierPlan(num_parts=base.num_parts, cap=base.cap,
-                      warm_cap=base.warm_cap,
-                      phase_tier_bytes=(base.tier_bytes, base.tier_bytes),
-                      boundaries=(2, _NO_BOUNDARY))
-st, tt = GopherEngine(pg, prog, backend="shard_map", mesh=mesh,
-                      exchange="phased", tier_plan=plan).run()
-assert np.array_equal(np.asarray(sd["x"]), np.asarray(st["x"]))
-assert tt.spills == 0 and tt.dense_retry_steps == 0
-assert tt.phase_hist.max() == 1
 # sabotaged tail: busiest pair at width 1 -> replicated cond flips to the
 # dense all_to_all mid-loop on every device at once
 occ = occupancy_from_graph(pg)
@@ -486,7 +514,6 @@ def test_announce_floor_bounded_by_horizon():
 # ---------------- landmark drift (serving) ----------------
 
 def test_landmark_drift_tracks_and_rebootstraps(road):
-    from repro.serving.cache import LandmarkCache
     from repro.serving.service import GraphQueryService
     g, pg = road
     svc = GraphQueryService({"rn": pg})

@@ -245,7 +245,8 @@ def test_planner_splits_oversize_groups():
 
 def test_result_cache_lru():
     c = ResultCache(capacity=2)
-    c.put("a", np.zeros(1)); c.put("b", np.ones(1))
+    c.put("a", np.zeros(1))
+    c.put("b", np.ones(1))
     assert c.get("a") is not None          # refresh 'a'
     c.put("c", np.ones(1))                 # evicts 'b'
     assert c.get("b") is None

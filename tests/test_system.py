@@ -5,9 +5,8 @@ import numpy as np
 import pytest
 import scipy.sparse.csgraph as csgraph
 
-import jax
 
-from repro.gofs import (GoFSStore, bfs_grow_partition, hash_partition,
+from repro.gofs import (bfs_grow_partition, hash_partition,
                         powerlaw_social, road_grid, subgraph_balanced_partition,
                         trace_star)
 from repro.gofs.formats import partition_graph

@@ -308,8 +308,8 @@ def test_service_version_keyed_cache_invalidation(road):
     assert svc.query("bfs", "road", 0).cached
     lm_v0 = svc.landmark_caches["road"].graph_version
 
-    res = svc.apply_delta("road", EdgeDelta.inserts([0], [g.n - 1]),
-                          rebuild_landmarks=True)
+    svc.apply_delta("road", EdgeDelta.inserts([0], [g.n - 1]),
+                    rebuild_landmarks=True)
     assert svc.graphs["road"].version == 1
     # stale entries evicted eagerly; fresh query recomputed on the new graph
     r2 = svc.query("bfs", "road", 0)

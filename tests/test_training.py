@@ -10,7 +10,7 @@ from repro.models import init_params
 from repro.training import optimizer as O
 from repro.training.checkpoint import Checkpointer
 from repro.training.data import DataCfg, SyntheticLM, make_dataset
-from repro.training.shardspec import param_pspecs, state_pspecs
+from repro.training.shardspec import param_pspecs
 from repro.training.train_step import IGNORE, cross_entropy, make_train_step
 
 KEY = jax.random.PRNGKey(0)
