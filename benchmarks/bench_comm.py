@@ -3,7 +3,7 @@
 Scenario (the RN-analogue incremental workload): a converged CC/BFS/SSSP
 fixpoint on the road network at version k, a 1% edge-insert batch arrives,
 and the frontier-seeded incremental restart re-converges on version k+1.
-Five wire disciplines are measured:
+Six wire disciplines are measured:
 
   dense     every partition pair's full cap-slot row, every superstep — the
             physical buffer geometry AND the parity oracle
@@ -13,8 +13,9 @@ Five wire disciplines are measured:
             taught by version k's runs puts quiet pairs in width-1 cold /
             cap/8 warm tiers, so the geometry the exchange actually routes
             tracks the frontier too
-  auto      the engine default (dense on local and 1-device meshes, tiered
-            on multi-device shard_map)
+  auto      the engine default: the Gopher Hot MEGASTEP fused route on
+            local (one kernel launch per superstep, nothing on the wire),
+            tiered on multi-device shard_map
   phased    Gopher Phases: frontier-PHASED tier schedules — one segmented
             BSP loop per frontier band, so a SINGLE run's geometry rides
             the contraction (per-phase wire histograms land in the
@@ -32,6 +33,9 @@ per-superstep wire/changed histograms, wall time — with results asserted
 BIT-IDENTICAL across modes on both backends, the tiered run asserted
 SPILL-FREE, and its per-round physical geometry asserted <= 25% of the
 dense P²·cap (the Gopher Mesh acceptance gate; CI runs this file on main).
+The Gopher Hot gates hold auto's megastep preference to its claim: warm
+head-to-head aggregate wall-clock at dense parity (within the single-core
+noise floor), the cc cold run beaten OUTRIGHT, and zero wire slots.
 The COLD-PLAN scenario (cold_phased_scenario) gates Gopher Phases: on a
 fresh-replica block with no taught pair profile, the phased run must land
 <= 40% of dense — the band the static plan only reaches warm. A tier-churn
@@ -102,6 +106,7 @@ def run(write_json: bool = True):
     records = {"dataset": "RN", "n": g_u.n, "num_parts": NUM_PARTS}
 
     delta_for = _delta_1pct
+    gate_rows = []                   # (algo, best dense s, best megastep s)
 
     def bench(algo, g, pg0, semiring, init_fn):
         from repro.core import PhasedTierPlan
@@ -126,13 +131,15 @@ def run(write_json: bool = True):
                "phase_boundaries": [int(b) for b in plan_ph.boundaries]}
 
         outs = {}
+        engines = {}
         for mode in ("dense", "compact", "tiered", "auto", "phased"):
             prog = SemiringProgram(semiring=semiring, resume=True)
             eng = GopherEngine(pg1, prog, gb=gb_dev, exchange=mode,
                                tier_plan=(plan if mode == "tiered"
                                           else plan_ph if mode == "phased"
                                           else None))
-            (state, tele), dt = timed(eng.run, warmup=True, repeats=3,
+            engines[mode] = eng
+            (state, tele), dt = timed(eng.run, warmup=True, repeats=7,
                                       extra=extra)
             outs[mode] = np.asarray(state["x"])
             rec[mode] = dict(
@@ -162,15 +169,54 @@ def run(write_json: bool = True):
         for mode in ("compact", "tiered", "auto", "phased"):
             assert np.array_equal(outs["dense"], outs[mode]), \
                 f"{algo}: {mode} exchange diverged from dense"
-        # auto on local resolves to the dense path (the PR 3 compact-
-        # overhead fix): it reuses the dense row's compiled runner, so any
-        # us_per_run gap is measurement noise — gate it loosely enough to
-        # stay deterministic on a noisy box but tight enough that
-        # reintroducing a compaction pass (~1.8x on CC) fails the bench
-        assert rec["auto"]["exchange"] == "dense"
-        assert rec["auto"]["us_per_run"] <= 1.5 * rec["dense"]["us_per_run"], \
-            f"{algo}: auto ({rec['auto']['us_per_run']}us) regressed the " \
-            f"dense path ({rec['dense']['us_per_run']}us)"
+        # auto on local resolves to the Gopher Hot megastep route — the
+        # fused one-launch-per-superstep loop, nothing on the wire
+        assert rec["auto"]["exchange"] == "megastep"
+        assert rec["auto"]["wire_slots"] == 0
+
+        # THE SMALL-FRONTIER GATE, measured head-to-head: dense and the
+        # fused route alternate run-for-run so scheduler drift on this
+        # single-core CI box lands on both sides equally, and each side
+        # keeps its best. At the 1-3 superstep warm floor both routes
+        # compile to ONE executable whose wall clock is dominated by fixed
+        # per-run cost, so per-algo the fused route must merely never LOSE
+        # beyond the measured noise swing; the outright wins are asserted
+        # where they are measurable — the aggregate across algos (run()
+        # asserts sum(megastep) <= sum(dense) within the noise floor), the
+        # cold gate below, and the 3-to-1 launch contraction in bench_obs.
+        best_d = best_a = float("inf")
+        for _ in range(10):
+            _, dt = timed(engines["dense"].run, extra=extra)
+            best_d = min(best_d, dt)
+            _, dt = timed(engines["auto"].run, extra=extra)
+            best_a = min(best_a, dt)
+        rec["gate"] = {"dense_us": round(best_d * 1e6),
+                       "megastep_us": round(best_a * 1e6)}
+        gate_rows.append((algo, best_d, best_a))
+        assert best_a <= 1.25 * best_d, \
+            f"{algo}: megastep ({best_a * 1e6:.0f}us) lost to the dense " \
+            f"path ({best_d * 1e6:.0f}us) beyond any plausible noise swing"
+
+        if algo == "cc":
+            # the COLD outright-win gate: full-frontier runs are ~100x
+            # longer, so scheduler noise averages out and the fused route's
+            # per-superstep savings must show up as a strict wall-clock win
+            ecd = GopherEngine(pg1, prog_cold, gb=gb_dev, exchange="dense")
+            eca = GopherEngine(pg1, prog_cold, gb=gb_dev, exchange="auto")
+            ecd.run(), eca.run()
+            cd = ca = float("inf")
+            for _ in range(3):
+                _, dt = timed(ecd.run)
+                cd = min(cd, dt)
+                _, dt = timed(eca.run)
+                ca = min(ca, dt)
+            rec["cold_gate"] = {"dense_us": round(cd * 1e6),
+                                "megastep_us": round(ca * 1e6)}
+            emit("comm_cc_cold_megastep_RN", ca,
+                 f"dense={cd * 1e6:.0f}us")
+            assert ca <= cd, \
+                f"cc cold: megastep ({ca * 1e6:.0f}us) lost to the dense " \
+                f"path ({cd * 1e6:.0f}us)"
 
         # ---- shard_map backend: tiered physical wire + parity (explicit —
         # auto resolves dense on this degenerate 1-device CI mesh) ----
@@ -227,6 +273,19 @@ def run(write_json: bool = True):
           make_sssp_init(int(pg_u.part_of[0]), int(pg_u.local_of[0])))
     bench("sssp", g_w, pg_w, "min_plus",
           make_sssp_init(int(pg_w.part_of[0]), int(pg_w.local_of[0])))
+
+    # the aggregate warm gate: across all three algos' head-to-head bests,
+    # the fused route must hold the dense oracle to parity within the
+    # single-core noise floor — that, the strict cold win, and the launch
+    # contraction (bench_obs) are why auto prefers megastep on local
+    agg_d = sum(d for _, d, _ in gate_rows)
+    agg_a = sum(a for _, _, a in gate_rows)
+    records["warm_gate"] = {"dense_us": round(agg_d * 1e6),
+                            "megastep_us": round(agg_a * 1e6)}
+    emit("comm_warm_gate_total", agg_a, f"dense={agg_d * 1e6:.0f}us")
+    assert agg_a <= 1.08 * agg_d, \
+        f"megastep warm aggregate ({agg_a * 1e6:.0f}us) lost to dense " \
+        f"({agg_d * 1e6:.0f}us) beyond the noise floor"
 
     records["cold_phased"] = cold_phased_scenario()
     records["tier_churn"] = churn_scenario()

@@ -1,16 +1,23 @@
 """Gopher Scope smoke gates (CI runs this file on main).
 
-Three acceptance checks on tiny CC + SSSP workloads:
+Four acceptance checks on tiny CC + SSSP workloads:
 
   1. TRACED runs produce a schema-valid Chrome trace (nested run -> phase ->
      superstep -> stage spans, balanced) and a schema-valid metrics
      snapshot — and their results are BIT-IDENTICAL to the untraced
-     compiled-loop runs.
+     compiled-loop runs. (Pinned to the staged ``compact`` route: the
+     fused megastep route collapses the per-stage spans by design and
+     has its own gate below.)
   2. DISABLED tracing is free: min-of-N wall clock of a run holding a
      disabled Tracer stays within 2% of the plain run (same compiled
      loop via the shared runner cache — the only delta is the
      ``tracer.enabled`` check, so anything past noise is a regression).
-  3. The artifacts land: BENCH_obs.json rows + the BENCH_obs_metrics.json
+  3. LAUNCH CONTRACTION: the Gopher Hot megastep route dispatches ONE
+     fused kernel per superstep where the staged route dispatches >= 3
+     (sweep, pack, exchange-apply) — asserted via the tracer's
+     ``dispatches`` count, with bit-identical results across the two
+     traced routes.
+  4. The artifacts land: BENCH_obs.json rows + the BENCH_obs_metrics.json
      registry snapshot write_bench_json emits for every suite.
 """
 from __future__ import annotations
@@ -44,10 +51,10 @@ def run():
 
     for algo, prog in _programs(pg).items():
         # -------- gate 1: traced run, valid artifacts, identical results --
-        plain = GopherEngine(pg, prog)
+        plain = GopherEngine(pg, prog, exchange="compact")
         state_p, tele_p = plain.run()
         tracer = Tracer(enabled=True)
-        traced = GopherEngine(pg, prog, tracer=tracer)
+        traced = GopherEngine(pg, prog, exchange="compact", tracer=tracer)
         state_t, tele_t = traced.run()
         np.testing.assert_array_equal(np.asarray(state_p["x"]),
                                       np.asarray(state_t["x"]))
@@ -65,7 +72,8 @@ def run():
              f"supersteps={tele_t.supersteps}")
 
         # -------- gate 2: disabled tracing is free ------------------------
-        off = GopherEngine(pg, prog, tracer=Tracer(enabled=False))
+        off = GopherEngine(pg, prog, exchange="compact",
+                           tracer=Tracer(enabled=False))
         _, t_plain = timed(plain.run, repeats=TIMED_REPEATS, warmup=True)
         _, t_off = timed(off.run, repeats=TIMED_REPEATS, warmup=True)
         overhead = t_off / t_plain - 1.0
@@ -74,6 +82,24 @@ def run():
         assert overhead < OVERHEAD_FRAC, \
             f"disabled tracing costs {overhead * 100:.2f}% (> " \
             f"{OVERHEAD_FRAC * 100:.0f}%) on {algo}"
+
+        # -------- gate 3: megastep launch contraction, 3+/superstep -> 1 --
+        d_staged = tracer.counts.get("dispatches", 0)
+        s = tele_t.supersteps
+        assert d_staged >= 3 * s + 3, \
+            f"staged route dispatched {d_staged} (< {3 * s + 3}) on {algo}"
+        tr_m = Tracer(enabled=True)
+        mega = GopherEngine(pg, prog, exchange="megastep", tracer=tr_m)
+        state_m, tele_m = mega.run()
+        np.testing.assert_array_equal(np.asarray(state_m["x"]),
+                                      np.asarray(state_t["x"]))
+        assert tele_m.supersteps == s
+        d_mega = tr_m.counts.get("dispatches", 0)
+        # prologue pack + fused superstep kernels + final unpack
+        assert d_mega == s + 2, \
+            f"megastep dispatched {d_mega}, expected {s + 2} on {algo}"
+        emit(f"obs_launch_contraction_{algo}", 0.0,
+             f"staged={d_staged};megastep={d_mega};supersteps={s}")
 
 
 if __name__ == "__main__":

@@ -438,12 +438,13 @@ def lint_kernel_file(path: str) -> List[Violation]:
 
 def lint_kernels(paths: Optional[List[str]] = None) -> List[Violation]:
     """Pass 3 over the repo's Pallas kernel modules (default: ops.py,
-    outbox_compact.py, semiring_spmv.py)."""
+    outbox_compact.py, semiring_spmv.py, megastep.py)."""
     if paths is None:
         import repro.kernels as _k
         base = os.path.dirname(_k.__file__)
         paths = [os.path.join(base, n)
-                 for n in ("ops.py", "outbox_compact.py", "semiring_spmv.py")]
+                 for n in ("ops.py", "outbox_compact.py", "semiring_spmv.py",
+                           "megastep.py")]
     out: List[Violation] = []
     for p in paths:
         out.extend(lint_kernel_file(p))

@@ -223,15 +223,16 @@ def check_program(program, exchange: str = "auto") -> List[Violation]:
     out = check_semiring(name)
     spec = REGISTRY.get(name)
     if (spec is not None and not spec.declares_idempotent
-            and exchange in ("tiered", "phased", "auto")):
+            and exchange in ("tiered", "phased", "auto", "megastep")):
         out.append(Violation(
             pass_name="semiring", code="ALLCLOSE_ONLY",
             where=f"{type(program).__name__} (semiring '{name}')",
             detail=(f"⊕ = '{spec.combine}' is not idempotent, so the "
-                    f"{exchange} dense-retry path cannot re-deliver "
+                    f"{exchange} path cannot re-deliver or re-associate "
                     "messages exactly — cross-mode parity for this "
                     "program is allclose-only, not bit-identical (the "
-                    "engine never retries sum-combine supersteps; this "
-                    "is informational)"),
+                    "engine never retries sum-combine supersteps, and the "
+                    "fused megastep route re-associates the ⊕ reduction; "
+                    "this is informational)"),
             severity=INFO))
     return out

@@ -8,13 +8,15 @@ from repro.core.subgraph import (meta_diameter, meta_graph, subgraph_sizes,
                                  vertex_diameter)
 from repro.core.tiers import (PhasedTierPlan, TierPlan, TierSchedule,
                               announce_frontier, expected_horizon,
-                              update_changed_profile, update_profile)
+                              update_changed_profile, update_phase_profile,
+                              update_profile)
 
 __all__ = [
     "GopherEngine", "Telemetry", "graph_block",
     "host_graph_block", "device_block", "patch_host_block",
     "TierPlan", "PhasedTierPlan", "TierSchedule", "update_profile",
-    "update_changed_profile", "expected_horizon", "announce_frontier",
+    "update_changed_profile", "update_phase_profile", "expected_horizon",
+    "announce_frontier",
     "SemiringProgram", "PageRankProgram",
     "init_max_vertex", "make_sssp_init", "make_bfs_init",
     "meta_graph", "meta_diameter", "vertex_diameter", "subgraph_sizes",

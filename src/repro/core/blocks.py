@@ -45,7 +45,7 @@ _SLOT_STRIDE = 1 << 16
 # per-partition leading-axis convention the shard_map in_specs assume (and
 # uploading pure planning state would thrash the gb-signature-keyed
 # compiled-loop cache).
-_HOST_ONLY = ("changed_ewma", "announce_ewma")
+_HOST_ONLY = ("changed_ewma", "announce_ewma", "phase_pair_ewma")
 
 
 def _binned_adjacency(pg: PartitionedGraph, lane_pad: int = 8):
@@ -164,7 +164,8 @@ def host_graph_block(pg: PartitionedGraph) -> dict:
     gofs.temporal.apply_delta pre-announces a delta's dirty frontier into
     the pair profile; patch_host_block carries both across versions
     untouched."""
-    from repro.core.tiers import PHASE_HIST_LEN, occupancy_from_ob_inv
+    from repro.core.tiers import (MAX_PHASES, PHASE_HIST_LEN,
+                                  occupancy_from_ob_inv)
     gb = {k: np.asarray(getattr(pg, k)) for k in _GB_FIELDS}
     gb["part_index"] = np.arange(pg.num_parts, dtype=np.int32)
     (gb["nbr_lo"], gb["wgt_lo"], gb["adj_hub_idx"],
@@ -177,6 +178,11 @@ def host_graph_block(pg: PartitionedGraph) -> dict:
     # per-pair expectation of the NEXT restart's traffic; zero = no delta
     # pending. Host-only, like changed_ewma.
     gb["announce_ewma"] = np.zeros_like(gb["wire_ewma"])
+    # per-band pair profiles (core.tiers.update_phase_profile): band k's own
+    # observed (P, P) packed-count EWMA, consumed by PhasedTierPlan.build in
+    # place of the scaled-global fallback once taught. Host-only.
+    gb["phase_pair_ewma"] = np.zeros(
+        (MAX_PHASES,) + gb["wire_ewma"].shape, np.float32)
     for name, arr in pg.attrs.items():
         gb[f"attr_{name}"] = np.asarray(arr)
     return gb

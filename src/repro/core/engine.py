@@ -21,10 +21,9 @@ Two backends share every line of superstep logic:
   'shard_map' — partitions sharded over a mesh axis; mailbox routed with a
                 real all_to_all; halt via psum (multi-chip / dry-run path)
 
-Five wire disciplines share both backends (``exchange=``, see make_exchange):
+Six wire disciplines share both backends (``exchange=``, see make_exchange):
   'dense'     every pair ships its full cap row (the parity oracle; also the
-              fastest choice where the physical wire is a single-host
-              transpose, hence the 'auto' pick on 'local')
+              baseline where the physical wire is a single-host transpose)
   'compact'   frontier-compacted protocol payload over the dense physical
               buffer (Gopher Wire)
   'tiered'    capacity-tiered PHYSICAL buffers routed per pair tier (Gopher
@@ -32,8 +31,16 @@ Five wire disciplines share both backends (``exchange=``, see make_exchange):
   'phased'    frontier-PHASED tier schedules (Gopher Phases): one segmented
               BSP loop per frontier band, so a single run's geometry rides
               the contraction — wide early rounds, narrow converged tail
-  'auto'      the default: 'dense' on 'local' (and on a 1-device shard_map
-              mesh, where the "wire" is the same single-host transpose),
+  'megastep'  Gopher Hot (local backend only): the whole superstep — mailbox
+              delivery, inbox combine, masked local fixpoint, halt
+              reduction — fused into ONE dispatch over flat state
+              (kernels.megastep); with a PhasedTierPlan whose narrow bands
+              fit VMEM, multiple supersteps run resident inside one launch
+  'auto'      the default: 'megastep' on 'local' when the program is
+              eligible (program.megastep_kind is not None — the sub-graph
+              centric fixpoint schedule, or fixed-iteration PageRank),
+              'dense' otherwise on 'local' and on a 1-device shard_map mesh
+              (where the "wire" is the same single-host transpose),
               'tiered' on a multi-device 'shard_map' mesh
 """
 from __future__ import annotations
@@ -52,6 +59,7 @@ from repro.core import messages as msg
 from repro.core.blocks import graph_block  # noqa: F401 (re-exported API)
 from repro.core.tiers import DEMOTE_STREAK, PhasedTierPlan, TierPlan
 from repro.gofs.formats import PartitionedGraph
+from repro.kernels import megastep as mega
 from repro.kernels import ops
 from repro.obs import metrics as obs_metrics
 from repro.obs import skew as obs_skew
@@ -167,7 +175,8 @@ class GopherEngine:
                  metrics: Optional["obs_metrics.MetricsRegistry"] = None,
                  validate: bool = False):
         assert backend in ("local", "shard_map")
-        assert exchange in ("auto", "compact", "dense", "tiered", "phased")
+        assert exchange in ("auto", "compact", "dense", "tiered", "phased",
+                            "megastep")
         if backend == "shard_map":
             assert mesh is not None
             d = mesh.shape[axis_name]
@@ -178,22 +187,42 @@ class GopherEngine:
         self.mesh = mesh
         self.axis_name = axis_name
         self.max_supersteps = max_supersteps
-        # wire discipline. 'auto' resolves per backend: on 'local' — and on
-        # a DEGENERATE 1-device shard_map mesh, where every partition shares
-        # one chip — the physical "wire" is a single-device transpose, so
-        # the dense path is both the fastest and the smallest: any
-        # compaction plan is pure overhead there; on a multi-device
-        # 'shard_map' mesh the tiered exchange makes the routed buffers
-        # track the frontier. 'dense' stays the parity / benchmark oracle;
-        # 'compact' is Gopher Wire's protocol-payload compaction over dense
-        # physical buffers; 'phased' (Gopher Phases) is requested
-        # explicitly with a PhasedTierPlan.
+        # wire discipline. 'auto' resolves per backend + program:
+        #   * 'local' + an ELIGIBLE program (program.megastep_kind not None,
+        #     i.e. the sub-graph centric run-to-fixpoint schedule or
+        #     fixed-iteration PageRank) -> 'megastep' (Gopher Hot): there is
+        #     no physical wire to route, so the winning move is to stop
+        #     dispatching the staged sweep/pack/route/halt stages at all and
+        #     fuse the superstep into one launch — this beats even the
+        #     dense single-host transpose at small frontiers (BENCH_comm's
+        #     small-frontier gate holds it to that claim);
+        #   * 'local' with an ineligible program — and a DEGENERATE 1-device
+        #     shard_map mesh, where every partition shares one chip — the
+        #     physical "wire" is a single-device transpose, so the dense
+        #     path is the smallest remaining choice: any compaction plan is
+        #     pure overhead there;
+        #   * a multi-device 'shard_map' mesh -> 'tiered': the routed
+        #     buffers track the frontier.
+        # 'dense' stays the parity / benchmark oracle; 'compact' is Gopher
+        # Wire's protocol-payload compaction over dense physical buffers;
+        # 'phased' (Gopher Phases) is requested explicitly with a
+        # PhasedTierPlan; 'megastep' may also be requested explicitly.
         self.exchange_requested = exchange
         if exchange == "auto":
-            local_wire = (backend == "local"
-                          or int(mesh.shape[axis_name]) == 1)
-            exchange = "dense" if local_wire else "tiered"
+            if (backend == "local"
+                    and getattr(program, "megastep_kind", None) is not None):
+                exchange = "megastep"
+            else:
+                local_wire = (backend == "local"
+                              or int(mesh.shape[axis_name]) == 1)
+                exchange = "dense" if local_wire else "tiered"
         self.exchange = exchange
+        if self.exchange == "megastep":
+            assert backend == "local", \
+                "the megastep exchange is a local-backend route (flat state " \
+                "spans every partition; shard_map meshes route tiered/phased)"
+            assert getattr(program, "megastep_kind", None) is not None, \
+                "program is not megastep-eligible (megastep_kind is None)"
         # plan/mode normalization, both directions: a PhasedTierPlan under
         # 'tiered' (e.g. a narrow_resume plan handed to exchange='auto' that
         # resolved tiered) upgrades the mode to 'phased' — a K=1 phased loop
@@ -210,11 +239,18 @@ class GopherEngine:
                 tier_plan = PhasedTierPlan.from_graph(pg)
             elif isinstance(tier_plan, TierPlan):
                 tier_plan = PhasedTierPlan.from_tier_plan(tier_plan)
+        # the megastep route keeps a provided plan too: a PhasedTierPlan's
+        # band geometry gates the resident narrow-phase mode (None = pure
+        # per-superstep fused BSP, still one dispatch per superstep)
         self.tier_plan = (tier_plan
-                          if self.exchange in ("tiered", "phased") else None)
+                          if self.exchange in ("tiered", "phased", "megastep")
+                          else None)
         self._gb = gb                # cached device-side graph block; pass a
                                      # shared one so many engines (a serving
                                      # fleet) reuse a single device copy
+        self._mega_cm = None         # lazily composed megastep mailbox
+                                     # arrays (see _gb_for_run)
+        self._runner_memo = {}       # per-engine front of _RUNNER_CACHE
         # Gopher Scope: host-side observability. None defers to the process
         # defaults at run time (so launch/scope can arm a tracer AFTER
         # engines were built). A disabled tracer keeps the compiled fused
@@ -246,6 +282,33 @@ class GopherEngine:
         if self._gb is None:
             self._gb = graph_block(self.pg)
         return self._gb
+
+    def _gb_for_run(self, gb):
+        """The graph block a compiled run actually receives. On the megastep
+        exchange this merges the COMPOSED MAILBOX (kernels.megastep
+        .compose_mailbox) into the block as ``mcm_*`` entries, built once
+        per engine OUTSIDE the compiled loop. The staged paths gather
+        through inverse maps precomputed in blocks.py; composing the fused
+        path's maps inside jit instead re-materializes them on every call —
+        measured at ~⅓ of a warm small-frontier run, which is exactly the
+        launch-overhead budget the megastep exists to reclaim. Python-int
+        statics are NOT shipped — _run_megastep re-derives them from shapes.
+        Callers that trace with a bare block (sentinel's trace_loop, the
+        traced stepped driver) skip this and compose inline."""
+        if self.exchange != "megastep":
+            return gb
+        if self._mega_cm is None:
+            kind = self.program.megastep_kind
+            cm = mega.compose_mailbox(
+                self._graph_block(),
+                adjacency="binned" if kind == "batched_semiring" else "full")
+            self._mega_cm = {**self._graph_block(),
+                             **{"mcm_" + k: v for k, v in cm.items()
+                                if k not in mega.MAILBOX_STATICS}}
+        if gb is self._gb:
+            return self._mega_cm
+        return {**self._mega_cm,
+                **{k: v for k, v in gb.items() if not k.startswith("mcm_")}}
 
     # ---------------- superstep body (backend-shared) ----------------
     def make_superstep(self, gb, num_queries: Optional[int] = None,
@@ -374,6 +437,8 @@ class GopherEngine:
         num_parts = self.pg.num_parts
         Q = num_queries
         mode = self.exchange
+        assert mode != "megastep", \
+            "the megastep route has no staged exchange (see _run_megastep)"
 
         if mode in ("tiered", "phased"):
             plan = self.tier_plan
@@ -535,6 +600,8 @@ class GopherEngine:
         """
         if self.exchange == "phased":
             return self._run_phased(gb, num_queries=num_queries)
+        if self.exchange == "megastep":
+            return self._run_megastep(gb, num_queries=num_queries)
         prog = self.program
         Q = num_queries
         mode = self.exchange
@@ -620,6 +687,222 @@ class GopherEngine:
 
         state, _, steps, _, tele = jax.lax.while_loop(
             cond, body, (state0, inbox0, jnp.int32(0), jnp.bool_(False), tele0))
+        return state, steps, tele
+
+    def _run_megastep(self, gb, num_queries: Optional[int] = None):
+        """Gopher Hot: the BSP loop with the whole superstep — mailbox
+        delivery, inbox ⊕-combine, masked local fixpoint, halt reduction —
+        fused into ONE dispatch over flat (P·v_max,) state
+        (kernels.megastep). The staged loop's three routing hops are
+        composed once per run into direct gather maps; delivery happens at
+        the TOP of each superstep from the previous round's send set, which
+        is the same message multiset one loop-carry shorter (and the prime
+        falls out of init's changed_v seed with no special case). Results
+        are bit-identical to the staged dense path for idempotent ⊕ and
+        allclose for PageRank — the same parity classes the exchange stack
+        already guarantees.
+
+        Telemetry mirrors the compact layout: ``pairs``/``chist`` are the
+        LOGICAL frontier observation (identical counts to the compact
+        path's active_slots, so the tier-profile EWMAs keep learning), and
+        ``wire``/``whist`` are zero — nothing ships through buffers.
+
+        With a PhasedTierPlan whose narrow band suffix fits
+        MEGASTEP_VMEM_BUDGET (scalar semiring programs), the tail runs in
+        RESIDENT mode: chaotic-relaxation rounds with the mailbox held
+        on chip — one sweep per delivery, every improvement rebroadcast
+        next round — which converges to the same bitwise fixpoint and, on
+        TPU, executes as a single multi-superstep Pallas launch
+        (per-round hist/chist entries are coarse there: the launch reports
+        totals, not rounds)."""
+        prog = self.program
+        kind = prog.megastep_kind
+        Q = num_queries
+        p_local = gb["vmask"].shape[0]
+        v_max = self.pg.v_max
+        max_s = self.max_supersteps
+        if "mcm_vmask" in gb:
+            # pre-composed by _gb_for_run; statics re-derived from shapes
+            cm = {k[4:]: v for k, v in gb.items() if k.startswith("mcm_")}
+            cm.update(num_parts=p_local, v_max=v_max,
+                      cap=gb["ob_inv"].shape[1] // p_local,
+                      n=p_local * v_max)
+            # the flat (n,)-shaped mailbox entries must not reach the
+            # per-partition vmaps below
+            gb = {k: v for k, v in gb.items() if not k.startswith("mcm_")}
+        else:
+            cm = mega.compose_mailbox(
+                gb,
+                adjacency="binned" if kind == "batched_semiring" else "full")
+        state0 = jax.vmap(prog.init)(gb)
+
+        def base_tele(pairs0, nsent0):
+            tele = dict(
+                liters=jnp.zeros((p_local,), jnp.int32),
+                hist=jnp.zeros((max_s,), jnp.int32),
+                whist=jnp.zeros((max_s + 1,), jnp.int32),
+                chist=jnp.zeros((max_s + 1,), jnp.int32)
+                    .at[0].set(jnp.sum(pairs0).astype(jnp.int32)),
+                sent=nsent0, wire=jnp.int32(0), pairs=pairs0)
+            if Q is not None:
+                tele["qsteps"] = jnp.zeros((Q,), jnp.int32)
+            return tele
+
+        def fold(tele, step, pairs, nsent, li, nchanged):
+            new = dict(liters=tele["liters"] + li,
+                       hist=tele["hist"].at[step].set(nchanged),
+                       whist=tele["whist"],
+                       chist=tele["chist"].at[step + 1]
+                           .set(jnp.sum(pairs).astype(jnp.int32)),
+                       sent=tele["sent"] + nsent,
+                       wire=tele["wire"],
+                       pairs=tele["pairs"] + pairs)
+            if Q is not None:
+                new["qsteps"] = tele["qsteps"]
+            return new
+
+        if kind == "pagerank":
+            r = state0["r"].reshape(-1)
+            deg = gb["out_degree"].astype(jnp.float32).reshape(-1)
+            telep = (jax.vmap(prog.teleport_fn)(gb).reshape(-1)
+                     if prog.teleport_fn is not None
+                     else 1.0 / prog.n_global)
+            pairs0, nsent0 = mega.round_stats(None, cm)
+            tele0 = base_tele(pairs0, nsent0)
+
+            def cond(c):
+                _, _, step, done, _ = c
+                return (~done) & (step < max_s)
+
+            def body(c):
+                r, _, step, _, tele = c
+                r2, delta, chg = mega.megastep_pagerank(
+                    r, cm, deg, telep, prog.n_global, prog.damping,
+                    prog.num_iters, step)
+                # PageRank sends unconditionally, so every round's logical
+                # observation is the full slot occupancy — including the
+                # final round, matching the staged loop's last exchange
+                pairs, nsent = mega.round_stats(None, cm)
+                nch = chg.astype(jnp.int32) * jnp.int32(p_local)
+                tele = fold(tele, step, pairs, nsent,
+                            jnp.ones((p_local,), jnp.int32), nch)
+                return r2, delta, step + 1, ~chg, tele
+
+            r, delta, steps, _, tele = jax.lax.while_loop(
+                cond, body,
+                (r, jnp.float32(jnp.inf), jnp.int32(0), jnp.bool_(False),
+                 tele0))
+            state = {"r": r.reshape(p_local, v_max),
+                     "delta": jnp.full((p_local,), delta)}
+            return state, steps, tele
+
+        semiring = prog.semiring
+        unroll = prog.fixpoint_unroll
+
+        if kind == "batched_semiring":
+            x = state0["x"].reshape(-1, Q)
+            ch = state0["changed_v"].reshape(-1, Q)
+            fr = state0["frontier"].reshape(-1, Q)
+            pairs0, nsent0 = mega.round_stats(ch, cm)
+            tele0 = base_tele(pairs0, nsent0)
+
+            def cond(c):
+                _, _, _, step, done, _ = c
+                return (~done) & (step < max_s)
+
+            def body(c):
+                x, ch, fr, step, _, tele = c
+                x2, ch2, fl, li = mega.megastep_semiring_batched(
+                    x, ch, fr, cm, semiring, unroll=unroll)
+                pairs, nsent = mega.round_stats(ch2, cm)
+                chpq = jnp.any(ch2.reshape(p_local, v_max, Q), axis=1)
+                changed_q = jnp.any(chpq, axis=0)
+                nch = jnp.sum(jnp.any(chpq, axis=-1).astype(jnp.int32))
+                tele = fold(tele, step, pairs, nsent, li, nch)
+                tele["qsteps"] = jnp.where(changed_q, step + 1,
+                                           tele["qsteps"])
+                return x2, ch2, fl, step + 1, ~jnp.any(changed_q), tele
+
+            x, ch, fr, steps, _, tele = jax.lax.while_loop(
+                cond, body,
+                (x, ch, fr, jnp.int32(0), jnp.bool_(False), tele0))
+            state = {"x": x.reshape(p_local, v_max, Q),
+                     "changed_v": ch.reshape(p_local, v_max, Q),
+                     "frontier": fr.reshape(p_local, v_max, Q)}
+            return state, steps, tele
+
+        # scalar semiring
+        x = state0["x"].reshape(-1)
+        ch = state0["changed_v"].reshape(-1)
+        fr = state0["frontier"].reshape(-1)
+        pairs0, nsent0 = mega.round_stats(ch, cm)
+        tele0 = base_tele(pairs0, nsent0)
+
+        def sem_fold(tele, step, ch2, li):
+            pairs, nsent = mega.round_stats(ch2, cm)
+            nch = jnp.sum(jnp.any(ch2.reshape(p_local, v_max),
+                                  axis=1).astype(jnp.int32))
+            return fold(tele, step, pairs, nsent, li, nch), nch
+
+        def cond(c):
+            _, _, _, step, done, _ = c
+            return (~done) & (step < max_s)
+
+        def bsp_body(c):
+            x, ch, fr, step, _, tele = c
+            x2, ch2, fl, li = mega.megastep_semiring(x, ch, fr, cm, semiring,
+                                                     unroll=unroll)
+            tele, nch = sem_fold(tele, step, ch2, li)
+            return x2, ch2, fl, step + 1, nch == 0, tele
+
+        # resident narrow-phase gate: the earliest superstep from which
+        # every remaining phase band's predicted round geometry fits the
+        # VMEM budget (None without a PhasedTierPlan, or when no suffix
+        # fits — pure per-superstep fused BSP then)
+        enter = None
+        if isinstance(self.tier_plan, PhasedTierPlan):
+            plans = self.tier_plan.phase_plans()
+            rb = [p.schedule(1).round_bytes(Q) for p in plans]
+            enter = mega.resident_enter_round(rb, self.tier_plan.boundaries)
+
+        carry = (x, ch, fr, jnp.int32(0), jnp.bool_(False), tele0)
+        if enter is None or enter >= max_s:
+            carry = jax.lax.while_loop(cond, bsp_body, carry)
+        else:
+            if enter > 0:
+                def pre_cond(c, _enter=jnp.int32(enter)):
+                    _, _, _, step, done, _ = c
+                    return (~done) & (step < _enter)
+
+                carry = jax.lax.while_loop(pre_cond, bsp_body, carry)
+            if mega._default_backend() == "pallas":
+                # one multi-superstep launch, mailbox on chip; telemetry is
+                # coarse for these rounds (totals, no per-round histograms)
+                x, ch, fr, step, done, tele = carry
+                x2, ch2, fr2, it, li = mega.resident_megastep_pallas(
+                    x, ch, fr, cm, semiring, max_steps=max_s - enter,
+                    interpret=jax.default_backend() != "tpu")
+                pairs, nsent = mega.round_stats(ch2, cm)
+                tele = dict(tele, liters=tele["liters"] + li,
+                            sent=tele["sent"] + nsent,
+                            pairs=tele["pairs"] + pairs)
+                carry = (x2, ch2, fr2, step + it,
+                         done | ~jnp.any(ch2), tele)
+            else:
+                def res_body(c):
+                    x, ch, fr, step, _, tele = c
+                    x2, ch2, fr2, ap = mega.resident_step_semiring(
+                        x, ch, fr, cm, semiring)
+                    tele, nch = sem_fold(tele, step, ch2,
+                                         ap.astype(jnp.int32))
+                    return x2, ch2, fr2, step + 1, nch == 0, tele
+
+                carry = jax.lax.while_loop(cond, res_body, carry)
+
+        x, ch, fr, steps, _, tele = carry
+        state = {"x": x.reshape(p_local, v_max),
+                 "changed_v": ch.reshape(p_local, v_max),
+                 "frontier": fr.reshape(p_local, v_max)}
         return state, steps, tele
 
     def _run_phased(self, gb, num_queries: Optional[int] = None):
@@ -784,7 +1067,8 @@ class GopherEngine:
             assert not self.tracer.enabled, \
                 "traced runs don't compose with checkpointing yet"
             return self._run_checkpointed(checkpointer, checkpoint_every, resume)
-        gb = self._graph_block()
+        gb = (self._graph_block() if self.tracer.enabled
+              else self._gb_for_run(self._graph_block()))
         if extra:
             gb = dict(gb)
             for k, v in extra.items():
@@ -812,7 +1096,8 @@ class GopherEngine:
         """
         Q = getattr(self.program, "num_queries", None)
         assert Q is not None, "run_queries requires a query-batched program"
-        gb = dict(self._graph_block())
+        gb = dict(self._graph_block() if self.tracer.enabled
+                  else self._gb_for_run(self._graph_block()))
         for k, v in (extra or {}).items():
             gb[k] = jnp.asarray(v)
         if self.tracer.enabled:
@@ -1004,6 +1289,8 @@ class GopherEngine:
         tr = self.tracer
         Q = num_queries
         mode = self.exchange
+        if mode == "megastep":
+            return self._traced_loop_megastep(gb, Q)
         phased = mode == "phased"
         num_parts = self.pg.num_parts
         max_s = self.max_supersteps
@@ -1154,6 +1441,177 @@ class GopherEngine:
             tele["qsteps"] = qsteps
         return state, step, tele
 
+    def _traced_stage_fns_megastep(self, num_queries: Optional[int]):
+        """Jitted stages for the traced megastep driver: prep (compose the
+        mailbox gather maps once per run), init (flat state + the prime
+        round's logical observation), and step — ONE fused dispatch per
+        superstep. The composed-mailbox dict carries static ints
+        (num_parts/v_max/cap/n); they are stripped before crossing the jit
+        boundary and re-injected from the partition scalars inside each
+        stage, so the arrays flow device-to-device without re-composition
+        and the ints never become tracers."""
+        cache = self.__dict__.setdefault("_traced_cache", {})
+        key = (num_queries, "megastep")
+        fns = cache.get(key)
+        if fns is not None:
+            return fns
+        prog = self.program
+        kind = prog.megastep_kind
+        Q = num_queries
+        p_local = self.pg.num_parts
+        v_max = self.pg.v_max
+        statics = dict(num_parts=p_local, v_max=v_max,
+                       cap=self.pg.mailbox_cap, n=p_local * v_max)
+
+        def with_statics(cma):
+            return dict(cma, **statics)
+
+        adj = "binned" if kind == "batched_semiring" else "full"
+
+        def prep_fn(gb):
+            cm = mega.compose_mailbox(gb, adjacency=adj)
+            return {k: v for k, v in cm.items() if k not in statics}
+
+        if kind == "pagerank":
+            def init_fn(gb, cma):
+                cm = with_statics(cma)
+                st = jax.vmap(prog.init)(gb)
+                pairs0, nsent0 = mega.round_stats(None, cm)
+                return (st["r"].reshape(-1), jnp.float32(jnp.inf)), \
+                    pairs0, nsent0
+
+            def step_fn(gb, cma, flat, step):
+                cm = with_statics(cma)
+                r, _ = flat
+                deg = gb["out_degree"].astype(jnp.float32).reshape(-1)
+                telep = (jax.vmap(prog.teleport_fn)(gb).reshape(-1)
+                         if prog.teleport_fn is not None
+                         else 1.0 / prog.n_global)
+                r2, delta, chg = mega.megastep_pagerank(
+                    r, cm, deg, telep, prog.n_global, prog.damping,
+                    prog.num_iters, step)
+                pairs, nsent = mega.round_stats(None, cm)
+                chinfo = jnp.broadcast_to(chg, (p_local,))
+                return ((r2, delta), jnp.ones((p_local,), jnp.int32),
+                        pairs, nsent, chinfo)
+
+            def finish(flat):
+                return {"r": flat[0].reshape(p_local, v_max),
+                        "delta": jnp.full((p_local,), flat[1])}
+        else:
+            semiring = prog.semiring
+            unroll = prog.fixpoint_unroll
+            batched = kind == "batched_semiring"
+            mk = (mega.megastep_semiring_batched if batched
+                  else mega.megastep_semiring)
+            tail = (Q,) if batched else ()
+
+            def init_fn(gb, cma):
+                cm = with_statics(cma)
+                st = jax.vmap(prog.init)(gb)
+                flat = tuple(st[k].reshape((-1,) + tail)
+                             for k in ("x", "changed_v", "frontier"))
+                pairs0, nsent0 = mega.round_stats(flat[1], cm)
+                return flat, pairs0, nsent0
+
+            def step_fn(gb, cma, flat, step):
+                cm = with_statics(cma)
+                x, ch, fr = flat
+                x2, ch2, fl, li = mk(x, ch, fr, cm, semiring,
+                                     unroll=unroll)
+                pairs, nsent = mega.round_stats(ch2, cm)
+                chinfo = jnp.any(
+                    ch2.reshape((p_local, v_max) + tail), axis=1)
+                return (x2, ch2, fl), li, pairs, nsent, chinfo
+
+            def finish(flat):
+                return {k: v.reshape((p_local, v_max) + tail)
+                        for k, v in zip(("x", "changed_v", "frontier"),
+                                        flat)}
+
+        fns = dict(prep=jax.jit(prep_fn), init=jax.jit(init_fn),
+                   step=jax.jit(step_fn), finish=finish)
+        cache[key] = fns
+        return fns
+
+    def _traced_loop_megastep(self, gb, num_queries: Optional[int]):
+        """Gopher Hot behind an enabled tracer: the fused while_loop
+        unrolled into ONE jitted dispatch per superstep (plus prep + init
+        at the prime), so the trace exhibits the launch-count contraction
+        this route exists for — each superstep span carries a single
+        'megastep' child instead of the staged sweep/pack/exchange trio,
+        and the 'dispatches' counter reads supersteps + 2 instead of
+        3·supersteps + 3. Resident narrow-phase mode is NOT entered here:
+        a trace wants per-superstep spans, and the resident launch hides
+        its rounds inside one kernel."""
+        tr = self.tracer
+        Q = num_queries
+        num_parts = self.pg.num_parts
+        max_s = self.max_supersteps
+        with tr.span("plan", phase=0, exchange="megastep",
+                     backend=self.backend):
+            fns = self._traced_stage_fns_megastep(Q)
+        tr.count("stage_builds", 1)
+
+        with tr.span("init"):
+            cma = fns["prep"](gb)
+            flat, pairs0, nsent0 = fns["init"](gb, cma)
+            tr.sync(pairs0)
+
+        liters = np.zeros(num_parts, np.int64)
+        hist = np.zeros(max_s, np.int64)
+        whist = np.zeros(max_s + 1, np.int64)
+        chist = np.zeros(max_s + 1, np.int64)
+        pairs_acc = np.asarray(pairs0, np.int64)
+        chist[0] = int(pairs_acc.sum())
+        sent = int(nsent0)
+        qsteps = np.zeros(Q, np.int64) if Q is not None else None
+
+        with tr.span("prime") as sp:
+            # no routed prime on the fused route: round 0's sends are
+            # delivered by the FIRST megastep dispatch, so the span only
+            # records the logical observation the compact prime would see
+            sp.set(wire=0, nsent=sent)
+        tr.count("dispatches", 2)            # prep + init
+
+        step = 0
+        done = False
+        with tr.span("phase", index=0, boundary=-1):
+            while not done and step < max_s:
+                with tr.span("superstep", step=step) as ss:
+                    with tr.span("megastep"):
+                        flat, li, pairs, nsent, chinfo = fns["step"](
+                            gb, cma, flat, jnp.int32(step))
+                        tr.sync(li)
+                    with tr.span("halt-vote"):
+                        ch = np.asarray(chinfo)
+                        li_np = np.asarray(li, np.int64)
+                        nsent_i = int(nsent)
+                        p = np.asarray(pairs, np.int64)
+                        if Q is None:
+                            nchanged = int(ch.sum())
+                            any_changed = nchanged > 0
+                        else:
+                            changed_q = ch.any(axis=0)
+                            nchanged = int(ch.any(axis=-1).sum())
+                            any_changed = bool(changed_q.any())
+                            qsteps[changed_q] = step + 1
+                    tr.count("dispatches", 1)   # whole superstep: 1 launch
+                    liters += li_np
+                    hist[step] = nchanged
+                    chist[step + 1] = int(p.sum())
+                    pairs_acc += p
+                    sent += nsent_i
+                    ss.set(changed=nchanged, wire=0, nsent=nsent_i)
+                    step += 1
+                    done = not any_changed
+
+        tele = dict(liters=liters, hist=hist, whist=whist, sent=sent,
+                    wire=0, chist=chist, pairs=pairs_acc)
+        if Q is not None:
+            tele["qsteps"] = qsteps
+        return fns["finish"](flat), step, tele
+
     def _telemetry(self, steps, tele, num_queries: Optional[int] = None,
                    rounds: Optional[int] = None,
                    exchange: Optional[str] = None) -> Telemetry:
@@ -1184,6 +1642,11 @@ class GopherEngine:
         elif exchange == "tiered":
             bytes_on_wire = (self.tier_plan.schedule(D)
                              .round_bytes(num_queries) * rounds)
+        elif exchange == "megastep":
+            # fused route: messages move through on-chip gathers, never a
+            # routed buffer — the LOGICAL observation (pairs/chist) still
+            # feeds the tier profiles, but no bytes hit a wire
+            bytes_on_wire = 0
         else:
             bytes_on_wire = Telemetry.model_bytes(
                 wire, self.pg.num_parts, rounds=rounds,
@@ -1243,10 +1706,24 @@ class GopherEngine:
         temporal-serving fleet that rebuilds its engines after every
         apply_delta re-enters the compiled loop as long as the delta didn't
         change any padded shape, instead of paying a full XLA compile per
-        graph version."""
+        graph version.
+
+        A PER-ENGINE memo sits in front of it: the module key's signature
+        walk (sorted shape/dtype tuples over ~a hundred block entries)
+        costs real per-run time on millisecond-scale warm runs, and for a
+        given engine the resolved runner only varies with (Q, exchange,
+        block key set, tier plan) — the plan compared by IDENTITY, so a
+        post-run escalation that swaps self.tier_plan misses the memo and
+        re-resolves."""
         exchange = exchange or self.exchange
-        tier_plan = (self.tier_plan if exchange in ("tiered", "phased")
+        tier_plan = (self.tier_plan
+                     if exchange in ("tiered", "phased", "megastep")
                      else None)
+        mkey = (num_queries, exchange,
+                None if gb_example is None else frozenset(gb_example))
+        hit = self._runner_memo.get(mkey)
+        if hit is not None and hit[0] is tier_plan:
+            return hit[1]
         if tier_plan is not None and getattr(self, "validate", False):
             # a non-static plan would blow up the cache-key hash below
             # with a bare TypeError — vet it first so the failure names
@@ -1293,6 +1770,7 @@ class GopherEngine:
             if len(_RUNNER_CACHE) >= _RUNNER_CACHE_CAP:
                 _RUNNER_CACHE.pop(next(iter(_RUNNER_CACHE)))
             _RUNNER_CACHE[key] = cached
+        self._runner_memo[mkey] = (tier_plan, cached)
         return cached
 
     def _run_checkpointed(self, ck, every: int, resume: bool):
@@ -1303,6 +1781,15 @@ class GopherEngine:
         resume, counters cover the current process's supersteps; the hist
         slots before the restored step are zero)."""
         assert self.backend == "local", "checkpointed runs use the local backend"
+        if self.exchange == "megastep":
+            # the fused route carries no staged (state, inbox) pair to
+            # snapshot; checkpointed runs drop to the compact staged loop,
+            # which produces the same results (bitwise for idempotent ⊕)
+            self.exchange = "compact"
+            try:
+                return self._run_checkpointed(ck, every, resume)
+            finally:
+                self.exchange = "megastep"
         assert self.exchange not in ("tiered", "phased"), \
             "checkpointed runs use the dense/compact exchange (tier overflow " \
             "repair and phase segmentation don't span snapshot boundaries)"

@@ -337,6 +337,20 @@ def route_tiered(dense_vals: jnp.ndarray, pvals: jnp.ndarray,
         tgt = jnp.where(rt == PAD, v * P, rt).reshape(-1)
         out = out.at[tgt].set(buf.reshape(-1, cap, Qg), mode="drop")
 
+    # residual hot rows (pair counts past the uniform all_to_all block):
+    # same dense-row geometry — full cap, no slot ids — shipped by one
+    # ppermute per device shift, so a skewed mesh pads only the devices
+    # that own the excess instead of every all_to_all block
+    for k, g, send_tab, recv_tab in sched.hot_res_shifts:
+        st = jnp.asarray(send_tab)[me]                  # (g,)
+        buf = dflat[jnp.where(st == PAD, 0, st)]        # (g, cap, Qg)
+        if axis_name is not None and k % D != 0:
+            perm = [(i, (i + k) % D) for i in range(D)]
+            buf = jax.lax.ppermute(buf, axis_name, perm)
+        rt = jnp.asarray(recv_tab)[me]                  # (g,)
+        tgt = jnp.where(rt == PAD, v * P, rt)
+        out = out.at[tgt].set(buf, mode="drop")
+
     # warm/cold tiers: ppermute round-robin over the nonzero device shifts
     flat = out.reshape(v * P * cap, Qg)
     for width, shifts in ((sched.warm_cap, sched.warm_shifts),

@@ -63,6 +63,15 @@ class SemiringProgram:
     def combine(self) -> str:
         return "min" if self.semiring == "min_plus" else "max"
 
+    @property
+    def megastep_kind(self) -> Optional[str]:
+        """Gopher Hot eligibility: the fused megastep route replays the
+        run-to-local-fixpoint schedule, so only the sub-graph centric mode
+        (max_local_iters=None) qualifies — a bounded fixpoint's leftover
+        frontier is already exact on the staged path and the fused loop
+        would have to replicate its cap bookkeeping for no win."""
+        return "semiring" if self.max_local_iters is None else None
+
     def init(self, gb) -> dict:
         # state: x — vertex values; changed_v — the send set (messages gate on
         # it); frontier — vertices whose local consequences are NOT yet
@@ -164,6 +173,15 @@ class PageRankProgram:
                                             # distribution; uniform when None
 
     combine = "sum"
+
+    @property
+    def megastep_kind(self) -> Optional[str]:
+        """Fused-route eligibility: only the fixed-iteration schedule. With
+        ``tol`` set the halt compares a GLOBAL float sum against a
+        threshold, and the fused route's flat ⊕=sum association could flip
+        that comparison on the margin — the staged and fused runs would
+        disagree on the STEP COUNT, not just low-order bits."""
+        return "pagerank" if self.tol is None else None
 
     def init(self, gb) -> dict:
         vmask = gb["vmask"]

@@ -59,6 +59,8 @@ PROFILE_DECAY = 0.25  # update_profile: weight kept on the OLD ewma
 # update_changed_profile. Phase boundaries, the announce-floor horizon and the
 # per-phase width scaling all derive from it.
 PHASE_HIST_LEN = 64   # rounds of history kept (EWMA truncates past this)
+MAX_PHASES = 3        # bands a phased plan can carry (and the per-band pair
+                      # profile ``phase_pair_ewma`` persists on the block)
 CHANGED_EPS = 0.5     # expected slots/round below this counts as quiesced
 WIDE_FRAC = 0.25      # frontier >= this fraction of peak -> the wide phase
 NARROW_FRAC = 0.05    # frontier < this fraction of peak -> the narrow phase
@@ -308,16 +310,34 @@ class PhasedTierPlan:
     @staticmethod
     def build(expected: np.ndarray, occupancy: np.ndarray, cap: int,
               changed_ewma: Optional[np.ndarray] = None, warm_div: int = 8,
-              max_phases: int = 3) -> "PhasedTierPlan":
+              max_phases: int = MAX_PHASES,
+              phase_pair_ewma: Optional[np.ndarray] = None
+              ) -> "PhasedTierPlan":
+        """``phase_pair_ewma`` (K, P, P), when taught (any band nonzero),
+        gives band k its OWN observed per-pair profile — the per-band EWMA
+        :func:`update_phase_profile` persists on the block — instead of the
+        single run-wide profile scaled by the band's relative frontier
+        width. A scaled global profile smears the wide band's hub pairs
+        into the narrow tail (and vice versa); the per-band record keeps a
+        pair that only fires early out of the tail's geometry entirely.
+        Untaught bands (all-zero) keep the scaled-global fallback, and an
+        under-taught band still costs at most a dense retry, never
+        correctness."""
         bands = phase_bands(changed_ewma, max_phases=max_phases)
         ew = np.minimum(np.asarray(expected, np.float64), occupancy)
         spans = np.array([s for _, s, _ in bands], np.float64)
         means = np.array([m for _, _, m in bands], np.float64)
         mean_run = float((spans * means).sum() / max(spans.sum(), 1.0))
+        ppe = (np.asarray(phase_pair_ewma, np.float64)
+               if phase_pair_ewma is not None else None)
         plans = []
-        for _, _, mean_k in bands:
-            scale = mean_k / mean_run if mean_run > 0 else 1.0
-            plans.append(TierPlan.build(ew * max(scale, 0.0), occupancy, cap,
+        for k, (_, _, mean_k) in enumerate(bands):
+            if ppe is not None and k < ppe.shape[0] and np.any(ppe[k] > 0):
+                ek = np.minimum(ppe[k], occupancy)
+            else:
+                scale = mean_k / mean_run if mean_run > 0 else 1.0
+                ek = ew * max(scale, 0.0)
+            plans.append(TierPlan.build(ek, occupancy, cap,
                                         warm_div=warm_div))
         ref = plans[0]
         obs_metrics.default_registry().counter(
@@ -329,10 +349,12 @@ class PhasedTierPlan:
 
     @staticmethod
     def from_block(host_gb: dict, warm_div: int = 8,
-                   max_phases: int = 3) -> "PhasedTierPlan":
+                   max_phases: int = MAX_PHASES) -> "PhasedTierPlan":
         """Phased plan from a host graph block: structural occupancy from
         the outbox slot map, pair profile from ``wire_ewma``, phase
-        boundaries from ``changed_ewma``. On a block with no taught
+        boundaries from ``changed_ewma``, per-band pair profiles from
+        ``phase_pair_ewma`` when runs have taught them (see
+        :func:`update_phase_profile`). On a block with no taught
         changed histogram this degenerates to a single-phase plan identical
         to ``TierPlan.from_block``."""
         occ = occupancy_from_ob_inv(host_gb["ob_inv"])
@@ -342,7 +364,9 @@ class PhasedTierPlan:
         cap = host_gb["ob_inv"].shape[1] // host_gb["ob_inv"].shape[0]
         return PhasedTierPlan.build(ew, occ, cap,
                                     changed_ewma=host_gb.get("changed_ewma"),
-                                    warm_div=warm_div, max_phases=max_phases)
+                                    warm_div=warm_div, max_phases=max_phases,
+                                    phase_pair_ewma=host_gb.get(
+                                        "phase_pair_ewma"))
 
     @staticmethod
     def from_graph(pg, warm_div: int = 8) -> "PhasedTierPlan":
@@ -449,11 +473,23 @@ class TierSchedule:
                           flat local outbox row ``(s % v) * P + d`` (PAD pads)
       hot_recv (D, D, h)  receiver j, source-device block i, row r ->
                           flat local inbox pair ``(d % v) * P + s``
+      hot_res_shifts      [(k, g, send (D, g), recv (D, g)), ...] — hot rows
+                          BEYOND the uniform all_to_all block, shipped dense
+                          (full cap, no ids) by one ppermute per shift
       warm/cold shifts    [(k, g, send (D, g), recv (D, g)), ...] — shift k
                           ships rows whose destination device is ``(i + k) %
                           D`` via one ppermute; shifts with zero pairs on
                           every device are skipped entirely (the round-robin
                           covers only the nonzero device pairs).
+
+    The hot tier is TWO-LEVEL: the all_to_all row block ``h`` is sized to
+    the MINIMUM per-device-pair hot count (uniform — every pair contributes
+    ``h`` full rows, so nothing inside it is padding), and the rows beyond
+    it ride a residual ppermute schedule. A skewed mesh therefore stops
+    padding every device's tables to the global max pair count: only the
+    devices that actually own the excess ship it. At D == 1 (or any
+    perfectly balanced mesh) min == max and the residual is empty, so the
+    layout — and every routed bit — is unchanged.
     """
 
     def __init__(self, plan: TierPlan, num_devices: int):
@@ -465,21 +501,45 @@ class TierSchedule:
         self.cap, self.warm_cap = plan.cap, plan.warm_cap
         tiers = plan.tiers
 
-        # hot tier: per-device-pair row blocks for one all_to_all
+        # hot tier, two-level: a uniform all_to_all block sized to the
+        # MINIMUM per-device-pair count, plus a residual ppermute schedule
+        # for the rows beyond it (dense rows — same geometry, no ids)
         hs, hd = np.nonzero(tiers == HOT)
         di, dj = hs // v, hd // v
         m = np.zeros((D, D), np.int64)
         np.add.at(m, (di, dj), 1)
-        self.hot_h = h = int(m.max()) if m.size else 0
-        self.hot_send = np.full((D, D, max(h, 1)), PAD, np.int32)
-        self.hot_recv = np.full((D, D, max(h, 1)), PAD, np.int32)
+        self.hot_h = hb = int(m.min()) if m.size else 0
+        self.hot_send = np.full((D, D, max(hb, 1)), PAD, np.int32)
+        self.hot_recv = np.full((D, D, max(hb, 1)), PAD, np.int32)
         fill = np.zeros((D, D), np.int64)
+        res = []            # residual hot rows past the uniform block
         for s, d in zip(hs, hd):
             i, j = s // v, d // v
             r = fill[i, j]
             fill[i, j] = r + 1
-            self.hot_send[i, j, r] = (s % v) * P + d
-            self.hot_recv[j, i, r] = (d % v) * P + s
+            if r < hb:
+                self.hot_send[i, j, r] = (s % v) * P + d
+                self.hot_recv[j, i, r] = (d % v) * P + s
+            else:
+                res.append((int((j - i) % D), int(i), int(s), int(d)))
+        shifts = []
+        for k in sorted({k for k, _, _, _ in res}):
+            rows = [(i, s, d) for kk, i, s, d in res if kk == k]
+            cnt = np.zeros(D, np.int64)
+            for i, _, _ in rows:
+                cnt[i] += 1
+            g = int(cnt.max())
+            send = np.full((D, g), PAD, np.int32)
+            recv = np.full((D, g), PAD, np.int32)
+            fillr = np.zeros(D, np.int64)
+            for i, s, d in rows:
+                j = (i + k) % D
+                r = fillr[i]
+                fillr[i] = r + 1
+                send[i, r] = (s % v) * P + d
+                recv[j, r] = (d % v) * P + s
+            shifts.append((k, g, send, recv))
+        self.hot_res_shifts = tuple(shifts)
 
         # warm/cold tiers: ppermute round-robin over device shifts
         def shifts_for(code):
@@ -513,6 +573,7 @@ class TierSchedule:
         """Value slots (Q-groups) physically routed per exchange round —
         the buffer geometry, data-independent. Dense ships P²·cap."""
         hot = self.D * self.D * self.hot_h * self.cap
+        hot += sum(self.D * g * self.cap for _, g, _, _ in self.hot_res_shifts)
         warm = sum(self.D * g * self.warm_cap for _, g, _, _ in self.warm_shifts)
         cold = sum(self.D * g for _, g, _, _ in self.cold_shifts)
         return hot + warm + cold
@@ -666,3 +727,48 @@ def update_changed_profile(host_gb: dict, count_hist,
     reg.gauge("tiers_profile_drift", labels={"profile": "changed"}).set(
         float(np.abs(out - old).sum()) / max(float(np.abs(old).sum()), 1.0))
     return out
+
+
+def update_phase_profile(host_gb: dict, phase_pair_slots, phase_hist,
+                         decay: float = PROFILE_DECAY
+                         ) -> Optional[np.ndarray]:
+    """Fold one phased run's PER-BAND pair observations into the block's
+    ``phase_pair_ewma`` (in place), band by band:
+
+        ewma'[k] = decay * ewma[k]
+                   + (1 - decay) * phase_pair_slots[k] / rounds_in_band_k
+
+    ``phase_pair_slots`` is ``Telemetry.phase_pair_slots`` — the (K, P, P)
+    per-phase sum of packed counts — and ``phase_hist`` is
+    ``Telemetry.phase_hist``, the per-round phase index, whose bincount
+    gives each band's realized round count (the normalizer). A band the
+    run never entered (zero rounds — e.g. an early global halt skipped the
+    narrow tail) is LEFT ALONE rather than decayed toward zero: absence of
+    rounds is absence of evidence, not evidence of silence. Bands past the
+    stored profile's depth (``MAX_PHASES``) are dropped. A block without
+    the profile (not built by host_graph_block) is left untouched.
+
+    :meth:`PhasedTierPlan.build` consumes the taught profile per band, so
+    each band's geometry tracks the pairs that actually fire IN that band
+    instead of one global EWMA rescaled by frontier width."""
+    ppe = host_gb.get("phase_pair_ewma")
+    if ppe is None or phase_pair_slots is None or phase_hist is None:
+        return None
+    obs = np.asarray(phase_pair_slots, np.float64)
+    old = np.asarray(ppe, np.float64)
+    K = min(obs.shape[0], old.shape[0])
+    rounds_k = np.bincount(np.asarray(phase_hist, np.int64).reshape(-1),
+                           minlength=K)
+    out = old.copy()
+    for k in range(K):
+        if rounds_k[k] <= 0:
+            continue
+        out[k] = (decay * old[k]
+                  + (1.0 - decay) * obs[k] / int(rounds_k[k]))
+    host_gb["phase_pair_ewma"] = out.astype(np.float32)
+    reg = obs_metrics.default_registry()
+    reg.counter("tiers_profile_updates_total",
+                labels={"profile": "phase_pair"}).inc()
+    reg.gauge("tiers_profile_drift", labels={"profile": "phase_pair"}).set(
+        float(np.abs(out - old).sum()) / max(float(np.abs(old).sum()), 1.0))
+    return host_gb["phase_pair_ewma"]

@@ -8,17 +8,23 @@ exchange × algorithm × mesh matrix:
 
   * **Pass 1** (SPMD collective verifier) traces every engine
     configuration's compiled BSP loop on :class:`jax.sharding.AbstractMesh`
-    shapes — 5 exchange modes × {cc, bfs, sssp, pagerank} × D ∈ {1,2,4}
-    with NO subprocess and no real devices — and checks cond-branch
-    collective agreement, axis binding, and tier-plan staticness.
+    shapes — 5 shard_map exchange modes × {cc, bfs, sssp, pagerank} ×
+    D ∈ {1,2,4} with NO subprocess and no real devices, plus the LOCAL
+    backend where ``exchange='auto'`` resolves eligible programs to the
+    Gopher Hot megastep route — and checks cond-branch collective
+    agreement, axis binding, tier-plan staticness, and that the fused
+    megastep loop issues no collectives at all.
   * **Pass 2** (semiring laws) probes each program's ⊕/⊗ algebra.
-  * **Pass 3** (Pallas linter) lints the kernel modules.
+  * **Pass 3** (Pallas linter) lints the kernel modules (megastep.py
+    included).
   * **HLO cross-check**: for every tiered/phased loop at D > 1 the loop is
     actually compiled (host platform forced to the max requested device
     count) and the post-compile collective instructions parsed by
     launch/hloparse must agree with the jaxpr-level trace — kind sets
     strictly (error on mismatch), per-kind counts recorded and compared
-    (warning on mismatch, to stay robust across XLA versions).
+    (warning on mismatch, to stay robust across XLA versions), and every
+    wire collective's byte size checked against the tier plan's predicted
+    per-device round geometry (error past the budget).
 
 Emits a machine-readable JSON report and exits non-zero on any
 error-severity violation — the CI ``sentinel-gate`` job runs exactly this.
@@ -123,6 +129,35 @@ def _hlo_cross_check(entry, eng, summary, violations):
     rep = Analyzer(text).collective_report()
     hlo_counts = {k: v["count"] for k, v in rep.items()}
     hlo_bytes = {k: v["bytes"] for k, v in rep.items()}
+    # per-collective byte budget: no single wire collective may ship more
+    # than the tier plan's predicted per-device ROUND geometry. One loop
+    # body routes exactly one exchange round, so even if XLA combines every
+    # wire collective of a round into one instruction the result stays
+    # within the round's per-device share — anything larger means the
+    # compiled loop ships bytes the plan never predicted.
+    from repro.core import PhasedTierPlan
+    plan = eng.tier_plan
+    plans = (plan.phase_plans() if isinstance(plan, PhasedTierPlan)
+             else (plan,))
+    budget = max(p.schedule(D).round_bytes(None) // D for p in plans)
+    if isinstance(plan, PhasedTierPlan):
+        # the phased loop carries a per-superstep dense-retry cond branch;
+        # its all_to_all legitimately ships the DENSE round, so the ceiling
+        # for a phased loop is the dense per-device geometry
+        P = plan.num_parts
+        budget = max(budget, (P // D) * P * plan.cap * 4)
+    over = [(ci.name, ci.result_bytes)
+            for k in ("all-to-all", "collective-permute") if k in rep
+            for ci in rep[k]["instrs"] if ci.result_bytes > budget]
+    if over:
+        violations.append(Violation(
+            pass_name="collectives", code="HLO_BYTE_BUDGET",
+            where=f"{entry['algo']}/{entry['exchange']}/D={D}",
+            detail=(f"wire collectives {over} exceed the tier plan's "
+                    f"per-device round budget of {budget} bytes — the "
+                    "compiled loop ships traffic the plan's wire geometry "
+                    "never predicted"),
+            severity=ERROR))
     want_kinds = set(summary.expected_hlo_kinds())
     got_kinds = set(rep)
     want_counts = _jaxpr_hlo_counts(summary)
@@ -148,6 +183,7 @@ def _hlo_cross_check(entry, eng, summary, violations):
     entry["hlo"] = {
         "kinds": sorted(got_kinds), "counts": hlo_counts,
         "bytes": hlo_bytes, "jaxpr_counts": want_counts,
+        "byte_budget": budget, "within_byte_budget": not over,
         "agrees_kinds": agrees_kinds, "agrees_counts": agrees_counts,
     }
 
@@ -202,6 +238,38 @@ def run_matrix(args) -> dict:
                         and eng.exchange in ("tiered", "phased")):
                     _hlo_cross_check(entry, eng, summary, violations)
                 configs.append(entry)
+
+    # local-backend coverage: exchange='auto' resolves the eligible
+    # programs to the Gopher Hot megastep route there. Pass 1 walks the
+    # fused loop like any other — and a megastep loop that issues ANY
+    # collective is broken by construction (the whole point of the route
+    # is that nothing crosses the wire)
+    from repro.analysis import ERROR, Violation
+    for algo in algos:
+        prog = _program(algo, pg)
+        eng = GopherEngine(pg, prog, exchange="auto")
+        pkey = (algo, eng.exchange)
+        if pkey not in checked_programs:
+            checked_programs.add(pkey)
+            violations += check_program(prog, eng.exchange)
+        summary, vs = verify_collectives(eng)
+        violations += vs
+        if eng.exchange == "megastep" and summary.counts:
+            violations.append(Violation(
+                pass_name="collectives", code="MEGASTEP_COLLECTIVE",
+                where=f"{algo}/megastep/local",
+                detail=(f"fused megastep loop issues collectives "
+                        f"{summary.counts} — the single-launch route must "
+                        "never touch the wire"),
+                severity=ERROR))
+        configs.append({
+            "algo": algo, "requested_exchange": "auto",
+            "exchange": eng.exchange, "D": 1, "backend": "local",
+            "counts": summary.counts,
+            "expected_hlo_kinds": list(summary.expected_hlo_kinds()),
+            "conds": summary.to_json()["conds"],
+            "errors": len(errors(vs)),
+        })
 
     errs = errors(violations)
     return {

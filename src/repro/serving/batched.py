@@ -69,6 +69,13 @@ class BatchedSemiringProgram:
     def combine(self) -> str:
         return "min" if self.semiring == "min_plus" else "max"
 
+    @property
+    def megastep_kind(self) -> Optional[str]:
+        """Gopher Hot eligibility (see SemiringProgram.megastep_kind): the
+        fused route replays the run-to-local-fixpoint schedule over the
+        two-bin batched sweep."""
+        return "batched_semiring" if self.max_local_iters is None else None
+
     def init(self, gb) -> dict:
         if self.resume:
             seed = gb[QUERY_FRONTIER_KEY] & gb["vmask"][:, None]

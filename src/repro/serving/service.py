@@ -27,9 +27,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core import (GopherEngine, PhasedTierPlan, device_block,
                         host_graph_block, update_changed_profile,
-                        update_profile)
+                        update_phase_profile, update_profile)
 from repro.gofs.formats import PartitionedGraph
 from repro.obs import metrics as obs_metrics
 from repro.obs.skew import SkewTracker
@@ -132,12 +134,14 @@ class GraphQueryService:
     def __init__(self, graphs: Dict[str, PartitionedGraph],
                  backend: str = "local", mesh=None, max_batch: int = 64,
                  cache_capacity: int = 1024, ppr_iters: int = 30,
+                 warm_start: bool = False,
                  metrics: Optional[obs_metrics.MetricsRegistry] = None):
         self.graphs = dict(graphs)
         self.backend = backend
         self.mesh = mesh
         self.max_batch = max_batch
         self.ppr_iters = ppr_iters
+        self.warm_start = warm_start
         self.cache = ResultCache(cache_capacity)
         self.stats = ServiceStats()
         self.stats._service = self
@@ -151,6 +155,9 @@ class GraphQueryService:
         self._engines: Dict[tuple, GopherEngine] = {}
         self._pending: List[Request] = []
         self._next_ticket = 0
+        if warm_start:
+            for name in self.graphs:
+                self.warm(name)
 
     @property
     def metrics(self) -> obs_metrics.MetricsRegistry:
@@ -241,6 +248,12 @@ class GraphQueryService:
                     backend=self.backend, mesh=self.mesh,
                     gb=self._gb[name], exchange=exchange, tier_plan=plan,
                     profile_block=res.block)
+        if self.warm_start:
+            # re-warm the serving loops for the new version: a delta that
+            # changed no padded shape re-enters the shared compiled loops
+            # (cache hit); one that grew a lane pays the compile HERE, off
+            # the request path
+            self.warm(name)
         dt = time.perf_counter() - t0
         self.stats.delta_apply_s.append(dt)
         reg = self.metrics
@@ -389,6 +402,12 @@ class GraphQueryService:
         if tele.count_hist is not None and batch.graph in self._host_gb:
             update_changed_profile(self._host_gb[batch.graph],
                                    tele.count_hist)
+        # per-band pair observations (phased runs): each band's geometry
+        # learns from the pairs that fired IN that band, not a global EWMA
+        if (tele.phase_pair_slots is not None
+                and batch.graph in self._host_gb):
+            update_phase_profile(self._host_gb[batch.graph],
+                                 tele.phase_pair_slots, tele.phase_hist)
         if tele.escalations:
             self._tier_plans[batch.graph] = eng.tier_plan
             for key, other in self._engines.items():
@@ -456,6 +475,53 @@ class GraphQueryService:
                 exchange=self._exchange_mode(),
                 tier_plan=self._tier_plan(graph))
         return self._engines[key]
+
+    def warm(self, name: str, families=("reach",), qs=(1,)) -> int:
+        """Pre-trace and AOT-compile the serving loops ``name`` will run —
+        one per (family, query-bucket) pair — so the first real request of
+        each shape skips the trace + XLA compile and pays only execution.
+        On the local backend this pre-traces the megastep fused route
+        (``exchange='auto'`` resolves there for the semiring families); on
+        a phased shard_map service it additionally pre-traces the
+        NARROW-RESUME single-phase loop at the same shapes, the loop the
+        landmark refresh rides after every apply_delta. ``qs`` entries are
+        the planner's padded bucket sizes (powers of two). Returns the
+        number of loops compiled. Called at registration and after every
+        delta when the service was built with ``warm_start=True`` (a delta
+        that changes no padded shape re-enters the same compiled loops, so
+        the re-warm is a cache hit)."""
+        pg = self.graphs[name]
+        done = 0
+        for family in families:
+            for Q in qs:
+                eng = self._engine(name, family, Q)
+                gb = dict(self._graph_block(name))
+                if family == "ppr":
+                    gb["qseed"] = jnp.asarray(ppr_query_seed(pg, [0] * Q))
+                else:
+                    gb["qinit"] = jnp.asarray(
+                        reachability_query_init(pg, [[0]] * Q))
+                plans = [eng.tier_plan]
+                if self._exchange_mode() == "phased":
+                    host = self._host_gb.get(name)
+                    if host is not None:
+                        plans.append(PhasedTierPlan.narrow_resume(host))
+                saved = eng.tier_plan
+                try:
+                    for plan in plans:
+                        eng.tier_plan = plan
+                        fn = eng._runner(num_queries=Q, gb_example=gb)
+                        try:
+                            fn.lower(gb).compile()
+                        except AttributeError:
+                            fn(gb)   # runner isn't AOT-lowerable: one real
+                                     # run primes the jit cache instead
+                        done += 1
+                finally:
+                    eng.tier_plan = saved
+        self.metrics.counter("serving_warm_compiles_total",
+                             labels={"graph": name}).inc(done)
+        return done
 
     # ---------------- landmark tier (approximate SSSP, zero supersteps) ----
     def enable_landmarks(self, graph: str, num_landmarks: int = 8,

@@ -127,8 +127,9 @@ def test_schedule_covers_every_pair_once(D):
                 assert sched.hot_recv[j, i, r] == (d % v) * P + s
                 assert (s, d) not in seen
                 seen.add((s, d))
-    # warm/cold: ppermute shifts
-    for shifts in (sched.warm_shifts, sched.cold_shifts):
+    # hot residual + warm/cold: ppermute shifts
+    for shifts in (sched.hot_res_shifts, sched.warm_shifts,
+                   sched.cold_shifts):
         for k, gsz, send, recv in shifts:
             assert send.shape == (D, gsz) and recv.shape == (D, gsz)
             for i in range(D):
@@ -164,8 +165,14 @@ def test_round_slots_accounting():
     # geometry is always <= the dense exchange's
     assert s1.round_slots() <= P * P * cap
     s2 = plan.schedule(2)
-    assert s2.round_slots() >= s1.round_slots()  # uniform-shape padding only
+    assert s2.round_slots() >= s1.round_slots()  # residual padding only
     assert s2.device_round_slots() * 2 == s2.round_slots()
+    # two-level hot: both hot pairs here live on device pair (0, 0), so the
+    # uniform all_to_all block is empty and they ride the residual shift —
+    # strictly below the old single-level layout that padded EVERY device
+    # pair's block to the max count (2*2*2*cap slots of mostly padding)
+    assert s2.hot_h == 0 and len(s2.hot_res_shifts) == 1
+    assert s2.round_slots() < 2 * 2 * 2 * cap
 
 
 # ---------------- fused pack kernel ----------------
@@ -302,17 +309,23 @@ def test_auto_resolves_per_backend(road):
     prog = SemiringProgram(semiring="max_first", init_fn=init_max_vertex)
     local = GopherEngine(pg, prog)
     assert local.exchange_requested == "auto"
-    assert local.exchange == "dense" and local.tier_plan is None
+    # Gopher Hot: on the local backend an eligible program rides the fused
+    # megastep route — one launch per superstep, nothing on the wire
+    assert local.exchange == "megastep" and local.tier_plan is None
+    # an ineligible program (bounded local fixpoint) stays dense
+    capped = GopherEngine(pg, SemiringProgram(semiring="max_first",
+                                              init_fn=init_max_vertex,
+                                              max_local_iters=1))
+    assert capped.exchange == "dense"
     # a DEGENERATE 1-device shard_map mesh is local in every physical sense
-    # — every partition shares one chip, the "wire" is a transpose — so
-    # auto picks dense there too (the tier plan overhead buys nothing)
+    # but the megastep route is vmap-only, so auto picks dense there
     sm = GopherEngine(pg, prog, backend="shard_map", mesh=_mesh1())
     assert sm.exchange == "dense" and sm.tier_plan is None
     # auto results match an explicit dense run on both backends
     sd, _ = GopherEngine(pg, prog, exchange="dense").run()
     sa, ta = local.run()
     assert np.array_equal(np.asarray(sd["x"]), np.asarray(sa["x"]))
-    assert ta.exchange == "dense"
+    assert ta.exchange == "megastep" and ta.wire_slots == 0
     sm_state, tm = sm.run()
     assert np.array_equal(np.asarray(sd["x"]), np.asarray(sm_state["x"]))
     assert tm.exchange == "dense"

@@ -7,10 +7,11 @@ Contract under test:
   - the tracer nests spans run -> phase -> superstep -> stage, exports a
     valid Chrome trace, and DISABLED degenerates to the shared no-op span
     (no span objects, no recording);
-  - Telemetry's round-indexed wire accounting holds across ALL FIVE
+  - Telemetry's round-indexed wire accounting holds across ALL SIX
     exchange disciplines: wire_hist has supersteps+1 entries summing to
     wire_slots, count_hist is consistent with pair_slots, phase
-    annotations are monotone;
+    annotations are monotone (the megastep route ships nothing — its wire
+    accounting is all zero while the logical counts persist);
   - the traced stepped driver is bit-identical to the fused compiled loop
     (states AND telemetry), on every discipline — tracing observes, never
     perturbs;
@@ -33,7 +34,7 @@ from repro.obs import (MetricsRegistry, SkewTracker, Tracer, imbalance_score,
                        skew_report, validate_chrome_trace, validate_metrics)
 from repro.obs.trace import _NOOP_SPAN
 
-MODES = ("dense", "compact", "tiered", "phased", "auto")
+MODES = ("dense", "compact", "tiered", "phased", "megastep", "auto")
 
 
 @pytest.fixture(scope="module")
@@ -169,7 +170,13 @@ def test_telemetry_round_invariants(road, exchange, algo):
     assert t.wire_hist is not None
     assert len(t.wire_hist) == t.supersteps + 1
     assert int(np.sum(t.wire_hist)) == t.wire_slots
-    assert t.wire_hist[0] > 0        # the prime round is accounted
+    if t.exchange == "megastep":     # auto resolves here on local
+        # fused route: no routed buffers at all — zero wire, zero bytes,
+        # but the logical frontier observation still feeds the profiles
+        assert t.wire_slots == 0 and t.bytes_on_wire == 0
+        assert int(np.sum(t.count_hist)) > 0
+    else:
+        assert t.wire_hist[0] > 0    # the prime round is accounted
     if t.exchange == "dense":
         assert t.count_hist is None  # dense measures no packed counts
     else:
@@ -212,9 +219,16 @@ def test_traced_run_bit_identical(road, exchange):
     validate_chrome_trace(trace)
     names = [s.name for s in tracer.spans]
     assert names.count("superstep") == t1.supersteps
-    assert names.count("sweep") == t1.supersteps
-    assert {"run", "phase", "prime", "pack", "exchange",
-            "halt-vote"} <= set(names)
+    if t1.exchange == "megastep":
+        # one fused dispatch per superstep: a single 'megastep' child
+        # replaces the staged sweep/pack/exchange trio
+        assert names.count("megastep") == t1.supersteps
+        assert "sweep" not in names and "exchange" not in names
+        assert {"run", "phase", "prime", "halt-vote"} <= set(names)
+    else:
+        assert names.count("sweep") == t1.supersteps
+        assert {"run", "phase", "prime", "pack", "exchange",
+                "halt-vote"} <= set(names)
 
 
 def test_traced_shard_map_phased():

@@ -173,13 +173,15 @@ def test_mamba2_vs_mamba1_style_recurrence(S, seed):
 @given(st.integers(20, 90), st.floats(1.5, 4.0), st.integers(2, 5),
        st.integers(0, 10_000), st.integers(1, 25), st.integers(0, 12))
 def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
-    """Gopher Wire/Mesh/Phases: any random delta batch over any random graph
-    — the compacted, tiered, auto and PHASED exchanges on the
-    zero-repack-patched block give bit-identical SSSP/CC results to the
-    dense exchange on a cold-packed block of the same graph version (tiered
-    may route through its dense fallback — and phased through its
-    per-superstep dense retry — when the delta overflows a tier; the result
-    contract is unconditional)."""
+    """Gopher Wire/Mesh/Phases/Hot: any random delta batch over any random
+    graph — the compacted, tiered, auto (which resolves to the fused
+    megastep route on local), PHASED and resident-megastep exchanges on
+    the zero-repack-patched block give bit-identical SSSP/CC results to
+    the dense exchange on a cold-packed block of the same graph version
+    (tiered may route through its dense fallback — and phased through its
+    per-superstep dense retry — when the delta overflows a tier; the
+    resident narrow-phase schedule relaxes chaotically but converges to
+    the same ⊕-fixpoint; the result contract is unconditional)."""
     from repro.core import (GopherEngine, PhasedTierPlan, SemiringProgram,
                             TierPlan, device_block, host_graph_block,
                             init_max_vertex, make_sssp_init,
@@ -217,10 +219,12 @@ def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
         prog = SemiringProgram(semiring=sr, init_fn=init)
         s_ref, _ = GopherEngine(pg1, prog, gb=device_block(cold),
                                 exchange="dense").run()
-        for mode in ("compact", "tiered", "auto", "phased"):
+        for mode in ("compact", "tiered", "auto", "phased", "megastep"):
+            # a PhasedTierPlan on the megastep route gates the resident
+            # narrow-phase schedule (auto already covers the plain fused BSP)
             plan = (TierPlan.from_block(res.block) if mode == "tiered"
                     else PhasedTierPlan.from_block(res.block)
-                    if mode == "phased" else None)
+                    if mode in ("phased", "megastep") else None)
             s_new, _ = GopherEngine(pg1, prog, gb=gb_patched, exchange=mode,
                                     tier_plan=plan).run()
             assert np.array_equal(np.asarray(s_ref["x"]),

@@ -68,8 +68,14 @@ def test_collectives_clean_on_real_engine(pg8, mode):
     summary, violations = verify_collectives(eng)
     assert errors(violations) == [], [str(v) for v in violations]
     assert summary.mesh_axes == {"parts": 4}
-    if mode != "dense" or True:
-        # every mode moves data across the 4-device mesh
+    # every mode moves data across the 4-device mesh — but the two-level
+    # hot schedule sizes the uniform all_to_all block to the MINIMUM
+    # per-device-pair hot count, so a skewed mesh (zero hot rows on some
+    # pair, as here) may route everything through residual ppermutes
+    moved = (summary.counts.get("all_to_all", 0)
+             + summary.counts.get("ppermute", 0))
+    assert moved > 0
+    if mode in ("dense", "compact"):
         assert summary.counts.get("all_to_all", 0) > 0
 
 
