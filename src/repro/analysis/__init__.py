@@ -55,6 +55,7 @@ __all__ = [
     "assert_clean", "check_plan_static", "check_program", "check_semiring",
     "errors", "lint_kernel_file", "lint_kernels", "lint_source",
     "probe_laws", "split_severity", "trace_loop", "validate_engine",
+    "validate_service", "validate_stage_fns",
     "verify_collectives", "verify_jaxpr",
 ]
 
@@ -71,3 +72,92 @@ def validate_engine(engine, num_queries=None, gb_example=None):
     violations += vs
     assert_clean(violations)
     return violations
+
+
+def validate_stage_fns(engine, num_queries=None, gb_example=None,
+                       phase=None):
+    """Pass 1 over the STAGED STEPPED DRIVER's stage programs — the
+    init/sweep/pack/route jits the checkpointed, traced, and recovery
+    paths dispatch per superstep (Gopher Shield replays ride these, so
+    their collectives must verify exactly like the fused loops'). Each
+    stage is traced with shape-only inputs chained through ``eval_shape``
+    (state from init, payload from pack, inbox from route) and walked by
+    the Pass 1 verifier. Raises :class:`SentinelError` on error-severity
+    findings; returns ({stage: CollectiveSummary}, [Violation])."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.blocks import graph_block
+    # recovery replays ride the COMPACT staged loop on these configurations
+    # (engine._run_checkpointed drops to it: megastep has no staged
+    # exchange at all, tiered/phased replay equivalent-bits over compact) —
+    # verify the loop that actually runs
+    if engine.exchange in ("megastep", "tiered", "phased"):
+        prev = engine.exchange
+        engine.exchange = "compact"
+        try:
+            return validate_stage_fns(engine, num_queries=num_queries,
+                                      gb_example=gb_example, phase=phase)
+        finally:
+            engine.exchange = prev
+    if gb_example is not None:
+        gb_shapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                     for k, v in gb_example.items()}
+    else:
+        gb_shapes = graph_block(engine.pg, as_spec=True)
+    fns = engine._traced_stage_fns(num_queries, phase)
+    state_s = jax.eval_shape(fns["init"], gb_shapes)
+    pack_s = jax.eval_shape(fns["pack"], gb_shapes, state_s)
+    payload_s = pack_s[0]
+    inbox_s, _ = jax.eval_shape(fns["route"], gb_shapes, payload_s)
+    step_s = jax.ShapeDtypeStruct((), jnp.int32)
+    mesh_axes = (dict(engine.mesh.shape)
+                 if engine.backend == "shard_map" and engine.mesh is not None
+                 else {})
+    violations = list(check_plan_static(getattr(engine, "tier_plan", None)))
+    summaries = {}
+    for name, jaxpr in (
+            ("init", jax.make_jaxpr(fns["init"])(gb_shapes)),
+            ("sweep", jax.make_jaxpr(fns["sweep"])(
+                gb_shapes, state_s, inbox_s, step_s)),
+            ("pack", jax.make_jaxpr(fns["pack"])(gb_shapes, state_s)),
+            ("route", jax.make_jaxpr(fns["route"])(gb_shapes, payload_s))):
+        summary, vs = verify_jaxpr(jaxpr, mesh_axes=mesh_axes)
+        summaries[name] = summary
+        violations += vs
+    assert_clean(violations)
+    return summaries, violations
+
+
+def validate_service(svc, graphs=None, families=("reach",), qs=(1,),
+                     stage_fns: bool = True):
+    """Sentinel over a GraphQueryService's pooled BATCHED serving loops:
+    for every (graph, family, Q-bucket) the exact query-batched engine
+    configuration ``drain()`` would dispatch is validated (collective
+    agreement, plan staticness, semiring laws), with the real query-array
+    entries (``qseed``/``qinit``) in the traced block so the jaxpr matches
+    the serving shapes bit-for-bit. With ``stage_fns=True`` the staged
+    stepped driver each engine's recovery replay would use is verified
+    too. Raises :class:`SentinelError` on any error-severity finding;
+    returns {(graph, family, Q): [Violation]}."""
+    import jax.numpy as jnp
+    from repro.serving.batched import (ppr_query_seed,
+                                       reachability_query_init)
+    out = {}
+    for name in (sorted(svc.graphs) if graphs is None else graphs):
+        pg = svc.graphs[name]
+        for family in families:
+            for Q in qs:
+                eng = svc._engine(name, family, Q)
+                gb = dict(svc._graph_block(name))
+                if family == "ppr":
+                    gb["qseed"] = jnp.asarray(ppr_query_seed(pg, [0] * Q))
+                else:
+                    gb["qinit"] = jnp.asarray(
+                        reachability_query_init(pg, [[0]] * Q))
+                vs = validate_engine(eng, num_queries=Q, gb_example=gb)
+                if stage_fns:
+                    _, svs = validate_stage_fns(eng, num_queries=Q,
+                                                gb_example=gb)
+                    vs = vs + svs
+                out[(name, family, Q)] = vs
+    return out

@@ -1,6 +1,6 @@
 """Gopher: sub-graph centric BSP engine (the paper's core contribution)."""
 from repro.core.blocks import (device_block, graph_block, host_graph_block,
-                               patch_host_block)
+                               patch_host_block, verify_host_block)
 from repro.core.engine import GopherEngine, Telemetry
 from repro.core.programs import (PageRankProgram, SemiringProgram,
                                  init_max_vertex, make_bfs_init, make_sssp_init)
@@ -14,6 +14,7 @@ from repro.core.tiers import (PhasedTierPlan, TierPlan, TierSchedule,
 __all__ = [
     "GopherEngine", "Telemetry", "graph_block",
     "host_graph_block", "device_block", "patch_host_block",
+    "verify_host_block",
     "TierPlan", "PhasedTierPlan", "TierSchedule", "update_profile",
     "update_changed_profile", "update_phase_profile", "expected_horizon",
     "announce_frontier",

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.gofs.formats import PAD, PartitionedGraph, grow_last_axis
 from repro.obs import metrics as obs_metrics
+from repro.resilience import faults as _faults
 
 _GB_FIELDS = ["nbr", "wgt", "vmask", "out_degree", "global_id", "sg_id",
               "re_src", "re_wgt", "re_dst_part", "re_dst_local", "re_slot"]
@@ -228,6 +229,58 @@ def graph_block(pg: PartitionedGraph, as_spec: bool = False) -> dict:
     return device_block(gb)
 
 
+def verify_host_block(host_gb: dict) -> list:
+    """Cheap structural audit of a host graph block — Gopher Shield's
+    corrupted-block detector. Returns a list of human-readable problems
+    (empty == structurally sound). Vectorized O(block size): catches the
+    corruption classes the fault injector (and real bit-rot) produce —
+    missing keys, shape drift between paired arrays, out-of-range ids,
+    non-finite weights on live lanes — without re-deriving the layout."""
+    need = set(_GB_FIELDS) | {"nbr_lo", "wgt_lo", "adj_hub_idx",
+                              "adj_hub_nbr", "adj_hub_wgt", "ob_inv",
+                              "ib_lo", "ib_hub_idx", "ib_hub", "part_index"}
+    missing = sorted(need - set(host_gb))
+    if missing:
+        return [f"missing block keys: {missing}"]
+    problems = []
+    nbr = np.asarray(host_gb["nbr"])
+    P, v_max = nbr.shape[0], nbr.shape[1]
+
+    def adj(name_n, name_w, bound):
+        a = np.asarray(host_gb[name_n])
+        w = np.asarray(host_gb[name_w])
+        if w.shape != a.shape:
+            problems.append(f"{name_w} shape {w.shape} != "
+                            f"{name_n} shape {a.shape}")
+            return
+        live = a != PAD
+        if live.any():
+            if not np.isfinite(w[live]).all():
+                problems.append(f"non-finite weight on live {name_n} lane")
+            bad = live & ((a < 0) | (a >= bound))
+            if bad.any():
+                problems.append(f"{int(bad.sum())} {name_n} ids outside "
+                                f"[0, {bound})")
+
+    adj("nbr", "wgt", v_max)
+    adj("nbr_lo", "wgt_lo", v_max)
+    adj("adj_hub_nbr", "adj_hub_wgt", v_max)
+    adj("re_src", "re_wgt", v_max)
+    for name, bound in (("re_dst_part", P), ("re_dst_local", v_max)):
+        a = np.asarray(host_gb[name])
+        live = np.asarray(host_gb["re_src"]) != PAD
+        if a.shape == live.shape and live.any():
+            bad = live & ((a < 0) | (a >= bound))
+            if bad.any():
+                problems.append(f"{int(bad.sum())} {name} ids outside "
+                                f"[0, {bound})")
+    ob_inv = np.asarray(host_gb["ob_inv"])
+    if ob_inv.ndim != 2 or ob_inv.shape[0] != P or ob_inv.shape[1] % P:
+        problems.append(f"ob_inv shape {ob_inv.shape} is not (P, P*cap) "
+                        f"for P={P}")
+    return problems
+
+
 # ---------------- zero-repack versioned patch ----------------
 
 def _grow_axis1(arr: np.ndarray, extra: int, fill):
@@ -258,6 +311,8 @@ def patch_host_block(gb: dict, new_pg: PartitionedGraph,
         (_SLOT_STRIDE), so growth re-lays only ob_inv, in O(P²·cap).
     """
     from repro.gofs.formats import _cumcount
+    _faults.fire("blocks.patch", version=getattr(new_pg, "version", None),
+                 parts=new_pg.num_parts)
     out = dict(gb)                               # copy-on-write per array
     for k in _GB_FIELDS:
         out[k] = np.asarray(getattr(new_pg, k))

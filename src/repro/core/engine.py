@@ -56,6 +56,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core import messages as msg
+from repro.resilience import faults as _faults
 from repro.core.blocks import graph_block  # noqa: F401 (re-exported API)
 from repro.core.tiers import DEMOTE_STREAK, PhasedTierPlan, TierPlan
 from repro.gofs.formats import PartitionedGraph
@@ -1063,10 +1064,10 @@ class GopherEngine:
         with resume=True) — without invalidating the shared cached block.
         """
         if checkpointer is not None and checkpoint_every > 0:
-            assert not extra, "checkpointed runs don't take extra blocks yet"
             assert not self.tracer.enabled, \
                 "traced runs don't compose with checkpointing yet"
-            return self._run_checkpointed(checkpointer, checkpoint_every, resume)
+            return self._run_checkpointed(checkpointer, checkpoint_every,
+                                          resume, extra=extra)
         gb = (self._graph_block() if self.tracer.enabled
               else self._gb_for_run(self._graph_block()))
         if extra:
@@ -1380,6 +1381,8 @@ class GopherEngine:
                             or streak >= DEMOTE_STREAK):
                         break
                     with tr.span("superstep", step=step) as ss:
+                        _faults.fire("engine.superstep", step=step,
+                                     backend=self.backend)
                         with tr.span("sweep"):
                             state, changed, li = stages[k]["sweep"](
                                 gb, state, inbox, jnp.int32(step))
@@ -1388,6 +1391,8 @@ class GopherEngine:
                             payload, nsent, wire, ex = stages[k]["pack"](
                                 gb, state)
                             tr.sync(payload)
+                        _faults.fire("exchange.route", step=step + 1,
+                                     backend=self.backend)
                         with tr.span("exchange"):
                             inbox, rex = stages[k]["route"](gb, payload)
                             tr.sync(inbox)
@@ -1579,6 +1584,8 @@ class GopherEngine:
         with tr.span("phase", index=0, boundary=-1):
             while not done and step < max_s:
                 with tr.span("superstep", step=step) as ss:
+                    _faults.fire("engine.superstep", step=step,
+                                 backend=self.backend)
                     with tr.span("megastep"):
                         flat, li, pairs, nsent, chinfo = fns["step"](
                             gb, cma, flat, jnp.int32(step))
@@ -1773,88 +1780,123 @@ class GopherEngine:
         self._runner_memo[mkey] = (tier_plan, cached)
         return cached
 
-    def _run_checkpointed(self, ck, every: int, resume: bool):
-        """Chunked BSP: jitted inner loop of <= `every` supersteps, snapshot
-        between chunks (local backend). Reuses the engine's cached graph
-        block — a checkpointed run must not build a second device copy —
-        and carries the same telemetry counters as a normal run (after a
-        resume, counters cover the current process's supersteps; the hist
-        slots before the restored step are zero)."""
-        assert self.backend == "local", "checkpointed runs use the local backend"
-        if self.exchange == "megastep":
-            # the fused route carries no staged (state, inbox) pair to
-            # snapshot; checkpointed runs drop to the compact staged loop,
-            # which produces the same results (bitwise for idempotent ⊕)
+    def _run_checkpointed(self, ck, every: int, resume: bool,
+                          extra: Optional[dict] = None):
+        """Checkpointable BSP: a host-stepped driver over the STAGED stage
+        functions (Gopher Scope's init/sweep/pack/route jits — bit-identical
+        to the fused loops), snapshotting (state, inbox, superstep) every
+        `every` supersteps on BOTH backends. Tiered/phased/megastep configs
+        drop to the compact staged loop — same results (bitwise for
+        idempotent ⊕) per the cross-mode identity tests: tier overflow
+        repair and phase segmentation don't span snapshot boundaries, and
+        the fused megastep route carries no staged (state, inbox) pair to
+        snapshot. Reuses the engine's cached graph block — a checkpointed
+        run must not build a second device copy — and carries the same
+        telemetry counters as a normal run (after a resume, counters cover
+        the current process's supersteps; the hist slots before the
+        restored step are zero).
+
+        Restore goes through the newest snapshot that passes checksum
+        verification (Checkpointer.latest_good_step): a corrupt/truncated
+        snapshot automatically falls back to the previous good one. Gopher
+        Shield fault sites `engine.superstep` / `exchange.route` fire in
+        this host loop — never inside compiled code."""
+        if self.exchange in ("megastep", "tiered", "phased"):
+            prev = self.exchange
             self.exchange = "compact"
             try:
-                return self._run_checkpointed(ck, every, resume)
+                return self._run_checkpointed(ck, every, resume, extra)
             finally:
-                self.exchange = "megastep"
-        assert self.exchange not in ("tiered", "phased"), \
-            "checkpointed runs use the dense/compact exchange (tier overflow " \
-            "repair and phase segmentation don't span snapshot boundaries)"
+                self.exchange = prev
         gb = self._graph_block()
+        if extra:
+            gb = dict(gb)
+            for k, v in extra.items():
+                gb[k] = jnp.asarray(v)
         prog = self.program
-        sstep = self.make_superstep(gb)
+        num_parts, v_max = self.pg.num_parts, self.pg.v_max
+        max_s = self.max_supersteps
+        fns = self._traced_stage_fns(None, None)
 
-        @jax.jit
-        def chunk(state, inbox, step0, tele):
-            def cond(c):
-                _, _, step, done, _ = c
-                return (~done) & (step < step0 + every) & (step < self.max_supersteps)
+        # host telemetry accumulators in the fused loop's exact layout
+        liters = np.zeros(num_parts, np.int64)
+        hist = np.zeros(max_s, np.int64)
+        whist = np.zeros(max_s + 1, np.int64)
+        chist = np.zeros(max_s + 1, np.int64)
+        pairs_acc = np.zeros((num_parts, num_parts), np.int64)
+        sent = wire_total = 0
 
-            def body(c):
-                state, inbox, step, _, tele = c
-                state, inbox, changed, li, nsent, wire, ex = sstep(state,
-                                                                   inbox, step)
-                nchanged = jnp.sum(changed.astype(jnp.int32))
-                tele = dict(liters=tele["liters"] + li,
-                            hist=tele["hist"].at[step].set(nchanged),
-                            whist=tele["whist"].at[step + 1].set(wire),
-                            sent=tele["sent"] + nsent,
-                            wire=tele["wire"] + wire,
-                            **{k: tele[k] + v for k, v in ex.items()})
-                return state, inbox, step + 1, ~jnp.any(changed), tele
-
-            return jax.lax.while_loop(
-                cond, body, (state, inbox, step0, jnp.bool_(False), tele))
-
-        if resume and ck.latest_step() is not None:
+        good = None
+        if resume:
+            good = (ck.latest_good_step() if hasattr(ck, "latest_good_step")
+                    else ck.latest_step())
+        if good is not None:
             snap_like = {
                 "state": jax.eval_shape(lambda g: jax.vmap(prog.init)(g), gb),
-                "inbox": jax.ShapeDtypeStruct(
-                    (self.pg.num_parts, self.pg.v_max), np.float32),
+                "inbox": jax.ShapeDtypeStruct((num_parts, v_max),
+                                              np.float32),
             }
-            snap, step = ck.restore(snap_like)
+            shardings = None
+            if self.backend == "shard_map":
+                sh = jax.sharding.NamedSharding(self.mesh, P(self.axis_name))
+                shardings = jax.tree.map(lambda _: sh, snap_like)
+            snap, step = ck.restore(snap_like, step=good,
+                                    shardings=shardings)
             state, inbox = snap["state"], snap["inbox"]
-            step = jnp.int32(step)
+            step = int(step)
+            primed = False
         else:
-            state = jax.vmap(prog.init)(gb)
-            inbox, nsent0, wire0, ex0 = jax.jit(self.make_exchange(gb))(state)
-            step = jnp.int32(0)
+            state = fns["init"](gb)
+            payload, nsent0, wire0, ex0 = fns["pack"](gb, state)
+            _faults.fire("exchange.route", step=0, backend=self.backend)
+            inbox, rex0 = fns["route"](gb, payload)
+            wire_i = int(rex0["wire"]) if "wire" in rex0 else int(wire0)
+            sent += int(nsent0)
+            wire_total += wire_i
+            whist[0] = wire_i                    # round 0 = the prime
+            if "pairs" in ex0:
+                p0 = np.asarray(ex0["pairs"], np.int64)
+                pairs_acc += p0
+                chist[0] = int(p0.sum())
+            step = 0
+            primed = True
 
-        primed = int(step) == 0
-        start = int(step)
-        whist0 = jnp.zeros((self.max_supersteps + 1,), jnp.int32)
-        if primed:
-            whist0 = whist0.at[0].set(wire0)     # round 0 = the prime
-        tele = dict(liters=jnp.zeros((self.pg.num_parts,), jnp.int32),
-                    hist=jnp.zeros((self.max_supersteps,), jnp.int32),
-                    whist=whist0,
-                    sent=(nsent0 if primed else jnp.int32(0)),
-                    wire=(wire0 if primed else jnp.int32(0)))
-        if self.exchange == "compact":
-            tele["pairs"] = (ex0["pairs"] if primed else jnp.zeros(
-                (self.pg.num_parts, self.pg.num_parts), jnp.int32))
+        start = step
         done = False
-        while not done and int(step) < self.max_supersteps:
-            state, inbox, step, done_flag, tele = chunk(state, inbox, step, tele)
-            done = bool(done_flag)
-            ck.save({"state": state, "inbox": inbox}, int(step))
+        while not done and step < max_s:
+            _faults.fire("engine.superstep", step=step,
+                         backend=self.backend)
+            state, changed, li = fns["sweep"](gb, state, inbox,
+                                              jnp.int32(step))
+            payload, nsent, wire, ex = fns["pack"](gb, state)
+            _faults.fire("exchange.route", step=step + 1,
+                         backend=self.backend)
+            inbox, rex = fns["route"](gb, payload)
+            ch = np.asarray(changed)
+            nchanged = int(ch.sum())
+            wire_i = int(rex["wire"]) if "wire" in rex else int(wire)
+            liters += np.asarray(li, np.int64)
+            hist[step] = nchanged
+            whist[step + 1] = wire_i
+            sent += int(nsent)
+            wire_total += wire_i
+            if "pairs" in ex:
+                p = np.asarray(ex["pairs"], np.int64)
+                pairs_acc += p
+                chist[step + 1] = int(p.sum())
+            step += 1
+            done = nchanged == 0
+            if done or (step - start) % every == 0 or step >= max_s:
+                ck.save({"state": state, "inbox": inbox}, step)
         # after a resume the wire counters cover only THIS process's
         # exchanges, so the byte model must count the same rounds (no prime
         # ran, and pre-resume supersteps shipped in the previous process)
-        rounds = int(step) - start + (1 if primed else 0)
+        rounds = step - start + (1 if primed else 0)
+        tele = dict(liters=liters, hist=hist, whist=whist, sent=sent,
+                    wire=wire_total)
+        if self.exchange == "compact":
+            tele["chist"] = chist
+            tele["pairs"] = pairs_acc
         t = self._telemetry(step, tele, rounds=rounds)
         self._record_run_metrics(t)
         return jax.tree.map(np.asarray, state), t

@@ -10,12 +10,13 @@ from repro.gofs.formats import (Graph, PartitionedGraph, dedupe_edges_min,
 from repro.gofs.generators import road_grid, powerlaw_social, trace_star
 from repro.gofs.partition import hash_partition, bfs_grow_partition, subgraph_balanced_partition
 from repro.gofs.store import GoFSStore
-from repro.gofs.temporal import (DeltaResult, EdgeDelta, TemporalStore,
-                                 apply_delta)
+from repro.gofs.temporal import (DeltaResult, DeltaValidationError, EdgeDelta,
+                                 TemporalStore, apply_delta, validate_delta)
 
 __all__ = [
     "Graph", "PartitionedGraph", "ell_from_csr", "dedupe_edges_min",
     "road_grid", "powerlaw_social", "trace_star",
     "hash_partition", "bfs_grow_partition", "subgraph_balanced_partition",
     "GoFSStore", "TemporalStore", "EdgeDelta", "DeltaResult", "apply_delta",
+    "DeltaValidationError", "validate_delta",
 ]

@@ -45,6 +45,71 @@ from repro.gofs.formats import (PAD, PartitionedGraph, dedupe_edges_min,
 from repro.gofs.store import GoFSStore
 
 
+class DeltaValidationError(ValueError):
+    """A malformed EdgeDelta batch. Raised BEFORE any state is touched, so
+    rejection is atomic — the alternative (out-of-range ids indexing part_of,
+    NaN weights poisoning min-reductions, an edge both inserted and removed
+    racing the removals-first rule) silently corrupts the versioned layout."""
+
+
+def validate_delta(pg, delta: "EdgeDelta", directed: bool = False,
+                   weight_domain: str = "nonneg") -> None:
+    """Gopher Shield input hardening for :func:`apply_delta`.
+
+    Rejects (typed :class:`DeltaValidationError`):
+      - vertex ids outside ``[0, pg.n_global)`` — they would index the
+        part_of/local_of maps out of bounds or wrap negatively;
+      - NaN insert weights — NaN is absorbing under min/⊕ and would poison
+        every reduction it reaches;
+      - negative insert weights under ``weight_domain='nonneg'`` (the
+        repo-wide distance semantics: min_plus shortest paths assume
+        nonnegative edges); semirings that allow them pass
+        ``weight_domain='any'``;
+      - an edge both inserted and removed in ONE batch (canonicalized for
+        undirected graphs) — under the removals-first rule that nets to an
+        insert, but callers that meant the opposite order get silent
+        corruption, so contradictory batches must be split or netted by the
+        caller.
+    """
+    n = pg.n_global
+    for nm, arr in (("insert_src", delta.insert_src),
+                    ("insert_dst", delta.insert_dst),
+                    ("remove_src", delta.remove_src),
+                    ("remove_dst", delta.remove_dst)):
+        a = np.asarray(arr)
+        if a.size and ((a < 0).any() or (a >= n).any()):
+            bad = a[(a < 0) | (a >= n)]
+            raise DeltaValidationError(
+                f"{nm} vertex ids out of range [0, {n}): "
+                f"{bad[:5].tolist()}")
+    w = np.asarray(delta.insert_wgt)
+    if w.size and np.isnan(w).any():
+        raise DeltaValidationError("insert_wgt contains NaN")
+    if weight_domain not in ("nonneg", "any"):
+        raise DeltaValidationError(
+            f"unknown weight_domain {weight_domain!r} "
+            "(expected 'nonneg' or 'any')")
+    if weight_domain == "nonneg" and w.size and (w < 0).any():
+        raise DeltaValidationError(
+            f"negative insert_wgt {w[w < 0][:5].tolist()} under the "
+            "'nonneg' weight domain; pass weight_domain='any' for "
+            "semirings that permit negative weights")
+    if delta.insert_src.size and delta.remove_src.size:
+        def keys(s, d):
+            s = np.asarray(s, np.int64)
+            d = np.asarray(d, np.int64)
+            if not directed:
+                s, d = np.minimum(s, d), np.maximum(s, d)
+            return s * n + d
+        both = np.intersect1d(keys(delta.insert_src, delta.insert_dst),
+                              keys(delta.remove_src, delta.remove_dst))
+        if both.size:
+            pairs = [(int(k // n), int(k % n)) for k in both[:5]]
+            raise DeltaValidationError(
+                f"contradictory batch: edges both inserted and removed "
+                f"in one delta: {pairs}")
+
+
 @dataclasses.dataclass
 class EdgeDelta:
     """One batch of edge mutations in GLOBAL vertex ids."""
@@ -149,7 +214,8 @@ def _local_subgraphs(nbr: np.ndarray, vmask: np.ndarray, parts):
 
 def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
                 directed: bool = False, lane_pad: int = 8,
-                block: Optional[dict] = None) -> DeltaResult:
+                block: Optional[dict] = None, validate: bool = True,
+                weight_domain: str = "nonneg") -> DeltaResult:
     """Produce the next graph version WITHOUT re-running the GoFS build.
 
     Host-side O(|delta|) patching of the device layout: local inserts fill
@@ -171,6 +237,9 @@ def apply_delta(pg: PartitionedGraph, delta: EdgeDelta,
     so tier plans rebuilt from the patched block give freshly woken pairs
     enough width.
     """
+    if validate:
+        validate_delta(pg, delta, directed=directed,
+                       weight_domain=weight_domain)
     n = pg.n_global
     P, v_max = pg.num_parts, pg.v_max
     part_of, local_of = pg.part_of, pg.local_of

@@ -40,7 +40,16 @@ def plan_mesh(n_chips: int, model_parallel: int = 16,
 
 def shrink_after_failure(old: MeshPlan, lost_chips: int) -> MeshPlan:
     """Drop whole DP rows to cover the loss — TP groups stay intact, so
-    parameter shards remain co-resident and restore is a pure re-shard."""
+    parameter shards remain co-resident and restore is a pure re-shard.
+
+    A 1-axis ``('parts',)`` mesh (the graph engine's) shrinks to the
+    surviving device count directly: GoFS virtual partitions are decoupled
+    from devices, so ANY surviving count re-tiles the same partitions. The
+    engine-facing wrapper (resilience.failover.shrink_parts_mesh)
+    additionally clamps to a divisor of the partition count so the
+    P % D == 0 tiling invariant holds."""
+    if old.axes == ("parts",):
+        return MeshPlan((max(old.shape[0] - lost_chips, 1),), ("parts",))
     shape = dict(zip(old.axes, old.shape))
     model = shape.get("model", 1)
     pods = shape.get("pod", 1)

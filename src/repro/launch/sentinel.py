@@ -271,11 +271,52 @@ def run_matrix(args) -> dict:
             "errors": len(errors(vs)),
         })
 
+    # Gopher Shield coverage — Pass 1 over (a) the STAGED STEPPED DRIVER
+    # (init/sweep/pack/route), the loop every checkpoint/replay recovery
+    # resumes through, per mesh size; (b) the batched multi-query SERVING
+    # loops a GraphQueryService pools, at the exact query shapes drain()
+    # dispatches
+    from repro.analysis import (ERROR, SentinelError, Violation,
+                                validate_service, validate_stage_fns)
+    staged = []
+    for D in devices:
+        mesh = jax.sharding.AbstractMesh((("parts", D),))
+        eng = GopherEngine(pg, _program("sssp", pg), backend="shard_map",
+                           mesh=mesh, exchange="compact")
+        entry = {"driver": "staged", "D": D}
+        try:
+            summaries, vs = validate_stage_fns(eng)
+            violations += vs
+            entry["stages"] = {k: s.counts for k, s in summaries.items()}
+            entry["errors"] = len(errors(vs))
+        except SentinelError as e:
+            violations.append(Violation(
+                pass_name="collectives", code="STAGED_DRIVER",
+                where=f"staged/D={D}", detail=str(e), severity=ERROR))
+            entry["errors"] = 1
+        staged.append(entry)
+
+    from repro.serving.service import GraphQueryService
+    svc = GraphQueryService({"sentinel": pg})
+    families = ("reach", "ppr") if args.matrix == "full" else ("reach",)
+    qs = (1, 2) if args.matrix == "full" else (1,)
+    serving = {}
+    try:
+        res = validate_service(svc, families=families, qs=qs)
+        serving = {f"{g}/{fam}/Q={q}": len(vs)
+                   for (g, fam, q), vs in res.items()}
+    except SentinelError as e:
+        violations.append(Violation(
+            pass_name="collectives", code="SERVING_LOOP",
+            where="serving", detail=str(e), severity=ERROR))
+
     errs = errors(violations)
     return {
         "matrix": args.matrix,
         "devices": list(devices),
         "configs": configs,
+        "staged_driver": staged,
+        "serving": serving,
         "kernel_lint": [v.to_json() for v in kern],
         "semirings": semi,
         "violations": [v.to_json() for v in violations],

@@ -1,0 +1,42 @@
+"""Gopher Shield — the robustness layer (fault injection, checkpoint/replay
+recovery, mesh-shrink failover, serving degradation).
+
+Leaf modules (:mod:`.faults`, :mod:`.degrade`) import eagerly — the engine
+and serving hooks depend on them. The drivers (:mod:`.recovery`,
+:mod:`.failover`) import :mod:`repro.core` and load lazily so the package
+stays importable from inside core modules without a cycle.
+"""
+from repro.resilience import faults
+from repro.resilience.degrade import CircuitBreaker, backoff_delays
+from repro.resilience.faults import (
+    BlockCorruptionFault,
+    CrashFault,
+    DeltaApplyFault,
+    DeviceLossFault,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    PoisonedQueryFault,
+)
+
+__all__ = [
+    "BlockCorruptionFault", "CircuitBreaker", "CrashFault",
+    "DeltaApplyFault", "DeviceLossFault", "FaultPlan", "FaultSpec",
+    "InjectedFault", "PoisonedQueryFault", "backoff_delays", "faults",
+    "recover", "run_with_recovery", "run_with_failover", "shrink_parts_mesh",
+    "RecoveryExhausted", "RecoveryReport",
+]
+
+_LAZY = {
+    "recover": "recovery", "run_with_recovery": "recovery",
+    "RecoveryExhausted": "recovery", "RecoveryReport": "recovery",
+    "run_with_failover": "failover", "shrink_parts_mesh": "failover",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(name)
+    import importlib
+    return getattr(importlib.import_module(f"repro.resilience.{mod}"), name)

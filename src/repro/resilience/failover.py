@@ -1,0 +1,144 @@
+"""Gopher Shield — mesh-shrink failover for the shard_map backend.
+
+Device loss on a 'parts' mesh is survivable WITHOUT repartitioning: GoFS
+virtual partitions are decoupled from devices, so the surviving devices
+re-tile the SAME P partitions over a smaller mesh (P % D must still hold —
+the shrink clamps to a divisor of P). The lost device's partitions are
+treated as a SYNTHETIC MIGRATION through the block-patch machinery's
+announce path: their rows are marked dirty and pre-announced into the
+block's traffic profile (core.tiers.announce_frontier — the announce-floor
+restart), the tier plans are rebuilt for the surviving mesh, and the run
+resumes from the newest checksum-verified snapshot. The math never saw the
+mesh — only the tiling changed — so the recovered fixpoint is bit-identical
+to the uninterrupted run for idempotent ⊕ (allclose for PageRank).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.launch import elastic
+from repro.resilience import faults as _faults
+from repro.resilience.recovery import (RecoveryExhausted, RecoveryReport,
+                                       _latest_good)
+
+
+def _largest_divisor_at_most(p: int, d: int) -> int:
+    for k in range(min(p, max(d, 1)), 0, -1):
+        if p % k == 0:
+            return k
+    return 1
+
+
+def shrink_parts_mesh(mesh, lost: Sequence[int], num_parts: int,
+                      axis_name: str = "parts"):
+    """Rebuild a 1-axis 'parts' mesh after losing the device INDICES in
+    ``lost``. elastic.shrink_after_failure sizes the surviving mesh; the
+    size is then clamped down to the largest divisor of ``num_parts`` so
+    the engine's P % D == 0 tiling invariant still holds. Survivors keep
+    their relative order, so partition rows re-tile contiguously."""
+    from repro.core import compat
+    devs = list(np.asarray(mesh.devices).reshape(-1))
+    lost_set = set(int(i) for i in lost)
+    survivors = [d for i, d in enumerate(devs) if i not in lost_set]
+    assert survivors, "every device was lost; nothing to fail over to"
+    plan = elastic.MeshPlan((len(devs),), (axis_name,))
+    shrunk = elastic.shrink_after_failure(plan, len(devs) - len(survivors))
+    d_new = _largest_divisor_at_most(num_parts, shrunk.shape[0])
+    return compat.make_mesh((d_new,), (axis_name,),
+                            devices=survivors[:d_new])
+
+
+@dataclasses.dataclass
+class FailoverReport(RecoveryReport):
+    """RecoveryReport plus the mesh-change record."""
+    lost_devices: list = dataclasses.field(default_factory=list)
+    lost_partitions: list = dataclasses.field(default_factory=list)
+    old_num_devices: Optional[int] = None
+    new_num_devices: Optional[int] = None
+
+
+def run_with_failover(engine, checkpointer, every: int = 1,
+                      extra: Optional[dict] = None,
+                      host_gb: Optional[dict] = None,
+                      max_restarts: int = 2):
+    """Run checkpointed on a shard_map engine; on an injected device loss,
+    shrink the mesh, re-announce the lost partitions, rebuild the tier
+    plans, and resume from the newest good snapshot.
+
+    Returns ``(engine, state, telemetry, FailoverReport)`` — the ENGINE is
+    returned because failover rebuilds it (new mesh, new plans); callers
+    must serve subsequent runs from the returned engine, not the one they
+    passed in. Plain crashes restart the current engine in place (same
+    policy as recovery.run_with_recovery)."""
+    from repro.core import (GopherEngine, PhasedTierPlan, TierPlan,
+                            host_graph_block)
+    from repro.core.tiers import announce_frontier
+
+    report = FailoverReport()
+    last = None
+    for attempt in range(max_restarts + 1):
+        report.attempts = attempt + 1
+        try:
+            state, tele = engine.run(checkpointer=checkpointer,
+                                     checkpoint_every=every,
+                                     resume=attempt > 0, extra=extra)
+            report.final_step = int(tele.supersteps)
+            return engine, state, tele, report
+        except _faults.CrashFault as e:
+            last = e
+            report.restarts += 1
+            report.faults.append(dict(site=e.site, kind=e.kind,
+                                      visit=e.visit))
+            report.resumed_steps.append(_latest_good(checkpointer))
+        except _faults.DeviceLossFault as e:
+            last = e
+            report.restarts += 1
+            report.faults.append(dict(site=e.site, kind=e.kind,
+                                      visit=e.visit))
+            report.resumed_steps.append(_latest_good(checkpointer))
+            assert engine.backend == "shard_map", \
+                "device-loss failover needs a shard_map mesh"
+            pg = engine.pg
+            P = pg.num_parts
+            D = int(engine.mesh.shape[engine.axis_name])
+            lost = e.payload.get("lost", 1)
+            lost = ([int(lost)] if np.isscalar(lost)
+                    else [int(i) for i in lost])
+            # block sharding of the leading (P,) axis: device d owns the
+            # contiguous partition rows [d*P/D, (d+1)*P/D)
+            per = P // D
+            lost_parts = [p for d in lost
+                          for p in range(d * per, (d + 1) * per)]
+            report.lost_devices = lost
+            report.lost_partitions = lost_parts
+            report.old_num_devices = D
+            new_mesh = shrink_parts_mesh(engine.mesh, lost, P,
+                                         axis_name=engine.axis_name)
+            report.new_num_devices = int(new_mesh.shape[engine.axis_name])
+            # synthetic migration of the lost rows: announce their live
+            # vertices as the dirty frontier so rebuilt plans give the
+            # re-homed partitions' pairs enough width from round 0
+            hb = host_gb if host_gb is not None else host_graph_block(pg)
+            dirty = np.zeros((P, pg.v_max), bool)
+            dirty[lost_parts] = np.asarray(hb["vmask"],
+                                           bool)[lost_parts]
+            announce_frontier(hb, pg, dirty)
+            plan = engine.tier_plan
+            if isinstance(plan, PhasedTierPlan):
+                plan = PhasedTierPlan.for_resume(hb)
+            elif isinstance(plan, TierPlan):
+                plan = TierPlan.from_block(hb)
+            engine.metrics.counter(
+                "failover_events_total",
+                labels={"backend": engine.backend}).inc()
+            engine = GopherEngine(
+                pg, engine.program, backend="shard_map", mesh=new_mesh,
+                axis_name=engine.axis_name,
+                max_supersteps=engine.max_supersteps,
+                exchange=engine.exchange_requested, tier_plan=plan,
+                tracer=engine._tracer, metrics=engine._metrics,
+                validate=engine.validate)
+    raise RecoveryExhausted(report, last)

@@ -1,0 +1,194 @@
+"""Gopher Shield — deterministic fault injection.
+
+A :class:`FaultPlan` is a seeded, replayable schedule of faults fired at
+NAMED SITES — host-side hook points the engine's stepped drivers, the block
+patcher, and the serving loop already pass through:
+
+    engine.superstep    once per superstep of a stepped (checkpointed or
+                        traced) BSP driver, before the sweep dispatch
+    exchange.route      once per mailbox routing round, before the route
+                        dispatch
+    blocks.patch        on entry to core.blocks.patch_host_block
+    svc.apply_delta     on entry of a GraphQueryService delta-apply attempt
+    svc.query           on entry of a GraphQueryService batch run attempt
+
+Hooks are a single function call into :func:`fire`, which is a no-op unless
+a plan is actively injected (``with faults.inject(plan): ...``) — the
+compiled loops are NEVER touched, so bit-identity of the math and the
+<2%-overhead observability budget are preserved by construction.
+
+Determinism: a spec either names the exact visit index it fires at (``at=``)
+or draws per-visit Bernoulli trials from its own ``np.random.default_rng``
+stream derived from ``(plan.seed, spec index)`` — two runs of the same plan
+against the same workload fire the same faults at the same visits, which is
+what makes chaos scenarios assertable (recovered state must be bit-identical
+to the fault-free run).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+SITES = ("engine.superstep", "exchange.route", "blocks.patch",
+         "svc.apply_delta", "svc.query")
+
+#: fault kind -> exception raised (straggler sleeps instead of raising)
+KINDS = ("device_loss", "corrupt_block", "failed_delta", "straggler",
+         "poisoned_query", "crash")
+
+
+class InjectedFault(RuntimeError):
+    """Base of every injected failure; carries the site and fire context."""
+
+    def __init__(self, site: str, kind: str, visit: int, payload: dict,
+                 ctx: dict):
+        super().__init__(f"injected {kind} at {site} (visit {visit})")
+        self.site = site
+        self.kind = kind
+        self.visit = visit
+        self.payload = dict(payload)
+        self.ctx = dict(ctx)
+
+
+class DeviceLossFault(InjectedFault):
+    """A device (or several: ``payload['lost']``) dropped out of the mesh."""
+
+
+class BlockCorruptionFault(InjectedFault):
+    """The patched graph block is corrupt/truncated and must not be trusted."""
+
+
+class DeltaApplyFault(InjectedFault):
+    """A delta-apply attempt failed before the new version was installed."""
+
+
+class PoisonedQueryFault(InjectedFault):
+    """A query batch poisoned its engine run (malformed input, OOM, ...)."""
+
+
+class CrashFault(InjectedFault):
+    """Generic process crash at a superstep boundary (checkpoint/replay
+    scenarios that are not device loss)."""
+
+
+_RAISES = {
+    "device_loss": DeviceLossFault,
+    "corrupt_block": BlockCorruptionFault,
+    "failed_delta": DeltaApplyFault,
+    "poisoned_query": PoisonedQueryFault,
+    "crash": CrashFault,
+}
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One fault to fire: WHERE (site), WHAT (kind), WHEN (at= exact visit
+    index, else per-visit probability), and HOW OFTEN (times, then the spec
+    disarms). ``delay_s`` is the stall for straggler faults; ``payload``
+    rides on the raised exception (e.g. ``lost=1`` devices)."""
+    site: str
+    kind: str
+    at: Optional[int] = None
+    prob: float = 0.0
+    times: int = 1
+    delay_s: float = 0.0
+    payload: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.site in SITES, f"unknown fault site {self.site!r}"
+        assert self.kind in KINDS, f"unknown fault kind {self.kind!r}"
+
+
+class FaultPlan:
+    """A seeded schedule of :class:`FaultSpec`s plus the record of what
+    actually fired (``plan.fired``). Replayable: visit counters reset with
+    :meth:`reset`, so the same plan object drives the reference and the
+    chaos run of a scenario."""
+
+    def __init__(self, specs, seed: int = 0):
+        self.specs = list(specs)
+        self.seed = int(seed)
+        self.reset()
+
+    def reset(self) -> None:
+        self._visits = {s: 0 for s in SITES}
+        self._remaining = [s.times for s in self.specs]
+        self._rngs = [np.random.default_rng((self.seed, i))
+                      for i in range(len(self.specs))]
+        self.fired: list = []
+
+    def visits(self, site: str) -> int:
+        return self._visits[site]
+
+    def fire(self, site: str, **ctx) -> None:
+        """One visit to `site`: decide per armed spec whether it fires.
+        Stragglers sleep; every other kind raises its typed fault (the
+        FIRST matching spec wins the raise; its shot is spent either way)."""
+        visit = self._visits[site]
+        self._visits[site] = visit + 1
+        for i, spec in enumerate(self.specs):
+            if spec.site != site or self._remaining[i] <= 0:
+                continue
+            if spec.at is not None:
+                hit = visit == spec.at
+            else:
+                hit = (spec.prob > 0.0
+                       and float(self._rngs[i].random()) < spec.prob)
+            if not hit:
+                continue
+            self._remaining[i] -= 1
+            self.fired.append(dict(site=site, kind=spec.kind, visit=visit,
+                                   payload=dict(spec.payload),
+                                   ctx={k: v for k, v in ctx.items()
+                                        if isinstance(v, (int, float, str,
+                                                          bool))}))
+            if spec.kind == "straggler":
+                time.sleep(spec.delay_s)
+                continue
+            raise _RAISES[spec.kind](site, spec.kind, visit, spec.payload,
+                                     ctx)
+
+    def record(self) -> list:
+        """What fired so far, JSON-serializable."""
+        return list(self.fired)
+
+
+# ---------------------------------------------------------------- injection
+_local = threading.local()
+
+
+def active() -> Optional[FaultPlan]:
+    stack = getattr(_local, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def inject(plan: Optional[FaultPlan]):
+    """Arm `plan` for the dynamic extent of the block. Nestable (innermost
+    plan wins); ``inject(None)`` is a no-op pass-through so scenario drivers
+    can take an optional plan."""
+    if plan is None:
+        yield None
+        return
+    stack = getattr(_local, "stack", None)
+    if stack is None:
+        stack = _local.stack = []
+    stack.append(plan)
+    try:
+        yield plan
+    finally:
+        stack.pop()
+
+
+def fire(site: str, **ctx) -> None:
+    """The hook entry compiled into NOTHING when no plan is armed: sites
+    call this unconditionally; it returns immediately unless a FaultPlan is
+    active on this thread."""
+    plan = active()
+    if plan is not None:
+        plan.fire(site, **ctx)

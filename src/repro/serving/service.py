@@ -31,9 +31,13 @@ import jax.numpy as jnp
 
 from repro.core import (GopherEngine, PhasedTierPlan, device_block,
                         host_graph_block, update_changed_profile,
-                        update_phase_profile, update_profile)
+                        update_phase_profile, update_profile,
+                        verify_host_block)
 from repro.gofs.formats import PartitionedGraph
+from repro.gofs.temporal import DeltaValidationError
 from repro.obs import metrics as obs_metrics
+from repro.resilience import faults as _faults
+from repro.resilience.degrade import CircuitBreaker, backoff_delays
 from repro.obs.skew import SkewTracker
 from repro.serving import planner as pl
 from repro.serving.batched import (BatchedPersonalizedPageRank,
@@ -70,6 +74,17 @@ class ServiceStats:
     engine_supersteps: int = 0
     landmark_rebootstraps: int = 0   # drift-triggered full re-selections
     busy_seconds: float = 0.0
+    # Gopher Shield degradation counters
+    deadline_misses: int = 0         # queries answered (or dropped) past SLO
+    query_retries: int = 0           # batch-run retry attempts
+    delta_retries: int = 0           # delta-apply retry attempts
+    delta_failures: int = 0          # delta batches given up on (stale mode)
+    recoveries: int = 0              # retry/stale episodes that healed
+    stale_served: int = 0            # responses served at version v while a
+                                     # failed delta left v+1 pending
+    breaker_opens: int = 0           # circuit-breaker open transitions
+    degraded_batches: int = 0        # batches answered with a typed error
+                                     # instead of a client-facing exception
     # bounded windows: long-running services must not grow without limit
     lane_fill: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=1024))
@@ -115,7 +130,15 @@ class ServiceStats:
             landmark_rebootstraps=self.landmark_rebootstraps,
             delta_apply_p50_ms=round(
                 float(np.percentile(np.asarray(self.delta_apply_s), 50) * 1e3),
-                3) if self.delta_apply_s else 0.0)
+                3) if self.delta_apply_s else 0.0,
+            deadline_misses=self.deadline_misses,
+            query_retries=self.query_retries,
+            delta_retries=self.delta_retries,
+            delta_failures=self.delta_failures,
+            recoveries=self.recoveries,
+            stale_served=self.stale_served,
+            breaker_opens=self.breaker_opens,
+            degraded_batches=self.degraded_batches)
         svc = self._service
         if svc is not None:
             out["imbalance"] = {g: t.imbalance()
@@ -125,6 +148,11 @@ class ServiceStats:
             lms = {g: svc.landmark_telemetry(g) for g in svc.landmark_caches}
             if lms:
                 out["landmarks"] = lms
+            if svc.breakers:
+                out["breakers"] = {g: b.state
+                                   for g, b in svc.breakers.items()}
+            if svc._stale_graphs:
+                out["stale_graphs"] = sorted(svc._stale_graphs)
         return out
 
 
@@ -135,13 +163,30 @@ class GraphQueryService:
                  backend: str = "local", mesh=None, max_batch: int = 64,
                  cache_capacity: int = 1024, ppr_iters: int = 30,
                  warm_start: bool = False,
-                 metrics: Optional[obs_metrics.MetricsRegistry] = None):
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None,
+                 deadline_s: Optional[float] = None, max_retries: int = 2,
+                 retry_base_s: float = 0.05, breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0, clock=time.monotonic):
         self.graphs = dict(graphs)
         self.backend = backend
         self.mesh = mesh
         self.max_batch = max_batch
         self.ppr_iters = ppr_iters
         self.warm_start = warm_start
+        # Gopher Shield degradation policy: per-query deadline (None = no
+        # SLO), bounded exponential-backoff retry on batch runs and delta
+        # applies, and a per-graph circuit breaker. The clock is injectable
+        # so tests drive deadlines/cooldowns without sleeping.
+        self.deadline_s = deadline_s
+        self.max_retries = int(max_retries)
+        self.retry_base_s = float(retry_base_s)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.clock = clock
+        self.breakers: Dict[str, CircuitBreaker] = {}
+        self._stale_graphs: set = set()  # graphs whose last delta FAILED:
+                                         # still serving version v while
+                                         # v+1 is pending (stale-serving)
         self.cache = ResultCache(cache_capacity)
         self.stats = ServiceStats()
         self.stats._service = self
@@ -216,16 +261,78 @@ class GraphQueryService:
             it.
 
         Returns the DeltaResult so callers can chain incremental analytics
-        off the dirty seeds."""
+        off the dirty seeds.
+
+        Gopher Shield: the apply is retried ``max_retries`` times with
+        exponential backoff. A corrupted patched block
+        (verify_host_block / an injected BlockCorruptionFault) drops the
+        cached block twins so the next attempt cold-rebuilds from the
+        still-installed version v. A :class:`DeltaValidationError` is
+        permanent — nothing was installed, retrying cannot help — and
+        re-raises immediately. When every retry is spent the graph enters
+        STALE-SERVING: version v keeps answering queries (its caches and
+        engines were never touched) while v+1 stays pending; the next
+        successful apply counts a recovery."""
+        t0 = time.perf_counter()
+        delays = backoff_delays(self.retry_base_s, self.max_retries)
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                _faults.fire("svc.apply_delta", graph=name, attempt=attempt)
+                res = self._apply_delta_once(name, delta, directed,
+                                             rebuild_landmarks, t0)
+            except DeltaValidationError:
+                self.stats.delta_failures += 1
+                self.metrics.counter(
+                    "serving_delta_failures_total",
+                    labels={"graph": name, "kind": "invalid"}).inc()
+                raise
+            except _faults.BlockCorruptionFault as e:
+                last = e
+                self.stats.delta_retries += 1
+                self._host_gb.pop(name, None)
+                self._gb.pop(name, None)
+                self.metrics.counter("serving_delta_retries_total",
+                                     labels={"graph": name}).inc()
+            except Exception as e:  # serving-loop boundary: degrade, not leak
+                last = e
+                self.stats.delta_retries += 1
+                self.metrics.counter("serving_delta_retries_total",
+                                     labels={"graph": name}).inc()
+            else:
+                if attempt or name in self._stale_graphs:
+                    self._stale_graphs.discard(name)
+                    self.stats.recoveries += 1
+                    self.metrics.counter(
+                        "serving_recoveries_total",
+                        labels={"graph": name, "site": "apply_delta"}).inc()
+                return res
+            if attempt < self.max_retries:
+                time.sleep(delays[attempt])
+        self._stale_graphs.add(name)
+        self.stats.delta_failures += 1
+        self.metrics.counter("serving_delta_failures_total",
+                             labels={"graph": name, "kind": "exhausted"}).inc()
+        raise last
+
+    def _apply_delta_once(self, name: str, delta, directed: bool,
+                          rebuild_landmarks: bool, t0: float):
         from repro.gofs.temporal import apply_delta as _apply
         from repro.serving.cache import LandmarkCache
-        t0 = time.perf_counter()
         old_lc = self.landmark_caches.get(name)
         host_gb = self._host_gb.get(name)
         if host_gb is None:
             host_gb = host_graph_block(self.graphs[name])
         res = _apply(self.graphs[name], delta, directed=directed,
                      block=host_gb)
+        # corrupted-block detection BEFORE install: a patched block that
+        # fails the structural audit must never replace the serving twin
+        if res.block is not None:
+            problems = verify_host_block(res.block)
+            if problems:
+                raise _faults.BlockCorruptionFault(
+                    "blocks.patch", "corrupt_block", -1, {},
+                    {"problems": "; ".join(problems[:3])})
         self.update_graph(name, res.pg)
         self._host_gb[name] = res.block
         self._gb[name] = device_block(res.block)
@@ -303,9 +410,21 @@ class GraphQueryService:
         reqs, self._pending = self._pending, []
         responses: Dict[int, Response] = {}
 
-        # 1. exact-cache pass + dedupe of identical in-flight queries
+        # 1. per-query deadline admission (Gopher Shield): a request that
+        # already overran its SLO is answered with a typed error instead of
+        # occupying an engine lane, then exact-cache pass + dedupe of
+        # identical in-flight queries
         by_key: Dict[tuple, List[Request]] = {}
         for r in reqs:
+            if (self.deadline_s is not None
+                    and t0 - r.t_submit > self.deadline_s):
+                self.stats.deadline_misses += 1
+                self.metrics.counter("serving_deadline_misses_total").inc()
+                responses[r.ticket] = Response(
+                    ticket=r.ticket, query=r.query, result=None,
+                    error="deadline exceeded",
+                    latency_s=t0 - r.t_submit)
+                continue
             key = self._cache_key(r.query)
             hit = self.cache.get(key)
             if hit is not None:
@@ -327,9 +446,24 @@ class GraphQueryService:
                     ticket=r.ticket, query=r.query, result=None, error=reason,
                     latency_s=time.perf_counter() - r.t_submit)
 
-        # 3. one engine run per batch
+        # 3. one engine run per batch — a batch whose retries are exhausted
+        # (or whose graph's breaker is open) DEGRADES to typed error
+        # responses; the exception never reaches the client
         for batch in batches:
-            results, qsteps = self._run_batch(batch)
+            try:
+                results, qsteps = self._run_batch(batch)
+            except Exception as e:
+                self.stats.degraded_batches += 1
+                self.metrics.counter("serving_degraded_batches_total",
+                                     labels={"graph": batch.graph}).inc()
+                err = f"degraded: {e}"
+                for q in batch.queries:
+                    for r in by_key[self._cache_key(q)]:
+                        responses[r.ticket] = Response(
+                            ticket=r.ticket, query=r.query, result=None,
+                            error=err,
+                            latency_s=time.perf_counter() - r.t_submit)
+                continue
             for i, q in enumerate(batch.queries):
                 # own copy — a row VIEW would pin the whole (Q, n) batch
                 # array in the cache for its lifetime
@@ -343,6 +477,18 @@ class GraphQueryService:
 
         # 4. aggregate telemetry
         done = [resp for resp in responses.values() if resp.error is None]
+        if self._stale_graphs:
+            stale = sum(1 for resp in done
+                        if resp.query.graph in self._stale_graphs)
+            if stale:
+                self.stats.stale_served += stale
+                self.metrics.counter(
+                    "serving_stale_served_total").inc(stale)
+        if self.deadline_s is not None:
+            # delivered-but-late responses count as misses too (the client
+            # got an answer; the SLO did not)
+            self.stats.deadline_misses += sum(
+                1 for resp in done if resp.latency_s > self.deadline_s)
         self.stats.served += len(done)
         self.stats.latencies_s.extend(resp.latency_s for resp in done)
         self.stats.busy_seconds += time.perf_counter() - t0
@@ -363,6 +509,51 @@ class GraphQueryService:
 
     # ---------------- batch execution ----------------
     def _run_batch(self, batch: pl.Batch):
+        """Gopher Shield wrapper around one batched engine run: per-graph
+        circuit breaker + bounded exponential-backoff retry. A graph whose
+        breaker is OPEN refuses the run outright — queries degrade to typed
+        error responses in drain() while caches and landmarks still answer
+        — instead of burning retries on a broken graph; the cooldown's one
+        HALF_OPEN trial re-closes it on success."""
+        br = self.breakers.get(batch.graph)
+        if br is None:
+            br = self.breakers[batch.graph] = CircuitBreaker(
+                threshold=self.breaker_threshold,
+                cooldown_s=self.breaker_cooldown_s, clock=self.clock)
+        delays = backoff_delays(self.retry_base_s, self.max_retries)
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            if not br.allow():
+                raise RuntimeError(f"circuit open for graph "
+                                   f"{batch.graph!r} ({br.opens} opens)")
+            try:
+                _faults.fire("svc.query", graph=batch.graph,
+                             family=batch.family, attempt=attempt)
+                out = self._run_batch_once(batch)
+            except Exception as e:
+                last = e
+                opens = br.opens
+                br.record_failure()
+                if br.opens > opens:
+                    self.stats.breaker_opens += 1
+                    self.metrics.counter("serving_breaker_opens_total",
+                                         labels={"graph": batch.graph}).inc()
+                self.stats.query_retries += 1
+                self.metrics.counter("serving_query_retries_total",
+                                     labels={"graph": batch.graph}).inc()
+            else:
+                br.record_ok()
+                if attempt:
+                    self.stats.recoveries += 1
+                    self.metrics.counter(
+                        "serving_recoveries_total",
+                        labels={"graph": batch.graph, "site": "query"}).inc()
+                return out
+            if attempt < self.max_retries:
+                time.sleep(delays[attempt])
+        raise last
+
+    def _run_batch_once(self, batch: pl.Batch):
         pg = self.graphs[batch.graph]
         Q = batch.padded_q
         # pad lanes replay query 0; their results are sliced away below

@@ -200,6 +200,10 @@ def test_random_delta_patched_block_parity(n, deg, parts, seed, n_ins, n_rm):
         rs, rd = a.col[pick], a.row[pick]
     else:
         rs = rd = np.zeros(0, np.int64)
+    # validate_delta rejects a contradictory batch (same undirected edge both
+    # inserted and removed), so generate a well-formed net batch
+    keep &= ~np.isin(np.minimum(iu, iv) * n + np.maximum(iu, iv),
+                     np.minimum(rs, rd) * n + np.maximum(rs, rd))
     delta = EdgeDelta.of(
         insert_src=iu[keep], insert_dst=iv[keep],
         insert_wgt=rng.uniform(0.1, 5.0, int(keep.sum())).astype(np.float32),

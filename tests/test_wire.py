@@ -243,12 +243,17 @@ def test_patched_block_chain_with_removals_and_hubs():
         el = np.stack([np.concatenate(srcs), np.concatenate(dsts)], 1)
         el = el[el[:, 0] < el[:, 1]]
         pick = rng.choice(el.shape[0], min(8, el.shape[0]), replace=False)
+        rs, rd = el[pick, 0], el[pick, 1]
         iu = rng.integers(0, g.n, 20)
         iv = (iu + rng.integers(1, g.n, 20)) % g.n
+        # keep the batch well-formed: validate_delta rejects an edge that is
+        # both inserted and removed in one delta (rs < rd already canonical)
+        ok = ~np.isin(np.minimum(iu, iv) * g.n + np.maximum(iu, iv),
+                      rs * g.n + rd)
         delta = EdgeDelta.of(
-            insert_src=iu, insert_dst=iv,
-            insert_wgt=rng.uniform(0.5, 4.0, 20).astype(np.float32),
-            remove_src=el[pick, 0], remove_dst=el[pick, 1])
+            insert_src=iu[ok], insert_dst=iv[ok],
+            insert_wgt=rng.uniform(0.5, 4.0, 20).astype(np.float32)[ok],
+            remove_src=rs, remove_dst=rd)
         res = apply_delta(pg, delta, directed=False, block=hb)
         pg, hb = res.pg, res.block
         assert pg.version == v
