@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional
 
 import jax
@@ -144,6 +145,13 @@ class Telemetry:
     dense_retry_steps: int = 0                 # supersteps whose exchange
                                                # fell back to the dense route
                                                # after an in-phase overflow
+    # Gopher Balance: wall-clock seconds attributed per partition by the
+    # host-stepped drivers (checkpointed/traced loops) — the TIME channel of
+    # the skew report. Injected straggler stalls land on their targeted
+    # partition; the remaining superstep time spreads evenly (one host
+    # process can't see real per-partition compute splits). None on the
+    # fused single-dispatch loops, which have no per-superstep host clock.
+    part_seconds: Optional[np.ndarray] = None  # (P,) float64
 
     @staticmethod
     def model_bytes(slots: int, num_parts: int, rounds: int, cap: int,
@@ -1052,7 +1060,8 @@ class GopherEngine:
 
     # ---------------- drivers ----------------
     def run(self, checkpointer=None, checkpoint_every: int = 0,
-            resume: bool = False, extra: Optional[dict] = None):
+            resume: bool = False, extra: Optional[dict] = None,
+            superstep_budget: Optional[int] = None):
         """Run to quiescence. With a `training.checkpoint.Checkpointer` and
         checkpoint_every=N, the BSP loop snapshots (state, inbox, superstep)
         every N supersteps and can restart from the last committed snapshot
@@ -1062,12 +1071,20 @@ class GopherEngine:
         ``extra`` carries per-run dynamic (P, ...) graph-block entries — e.g.
         ``x0`` / ``frontier0`` for an incremental resume (SemiringProgram
         with resume=True) — without invalidating the shared cached block.
+
+        ``superstep_budget`` (checkpointed runs only) caps THIS call at N
+        supersteps and snapshots at the cut, so a supervisor (Gopher
+        Balance's run_with_rebalance) can interleave decisions between
+        segments of one logical run and resume exactly where it stopped.
         """
         if checkpointer is not None and checkpoint_every > 0:
             assert not self.tracer.enabled, \
                 "traced runs don't compose with checkpointing yet"
             return self._run_checkpointed(checkpointer, checkpoint_every,
-                                          resume, extra=extra)
+                                          resume, extra=extra,
+                                          superstep_budget=superstep_budget)
+        assert superstep_budget is None, \
+            "superstep_budget requires a checkpointed run"
         gb = (self._graph_block() if self.tracer.enabled
               else self._gb_for_run(self._graph_block()))
         if extra:
@@ -1331,6 +1348,11 @@ class GopherEngine:
         seg_end = np.zeros(K, np.int64)
         qsteps = np.zeros(Q, np.int64) if Q is not None else None
         sent = wire_total = dsteps = 0
+        psec = np.zeros(num_parts, np.float64)
+        part_verts = tuple(int(x) for x in
+                           np.asarray(self.pg.vmask, bool).sum(1))
+        nd = (1 if self.backend == "local"
+              else int(self.mesh.shape[self.axis_name]))
 
         def fold_pairs(ex, rex, k, rnd):
             """One round's per-pair telemetry into the host accumulators;
@@ -1381,8 +1403,11 @@ class GopherEngine:
                             or streak >= DEMOTE_STREAK):
                         break
                     with tr.span("superstep", step=step) as ss:
-                        _faults.fire("engine.superstep", step=step,
-                                     backend=self.backend)
+                        t0 = time.perf_counter()
+                        eff = _faults.fire("engine.superstep", step=step,
+                                           backend=self.backend,
+                                           part_verts=part_verts,
+                                           num_devices=nd)
                         with tr.span("sweep"):
                             state, changed, li = stages[k]["sweep"](
                                 gb, state, inbox, jnp.int32(step))
@@ -1414,6 +1439,14 @@ class GopherEngine:
                                 any_changed = bool(changed_q.any())
                                 qsteps[changed_q] = step + 1
                         tr.count("dispatches", 3)
+                        dt = time.perf_counter() - t0
+                        stalls = (eff or {}).get("stalls", [])
+                        inj = sum(s for p, s in stalls
+                                  if 0 <= p < num_parts)
+                        psec += max(dt - inj, 0.0) / num_parts
+                        for p, s in stalls:
+                            if 0 <= p < num_parts:
+                                psec[p] += s
                         liters += li_np
                         hist[step] = nchanged
                         whist[step + 1] = wire_i
@@ -1432,7 +1465,7 @@ class GopherEngine:
             seg_end[k] = step
 
         tele = dict(liters=liters, hist=hist, whist=whist,
-                    sent=sent, wire=wire_total)
+                    sent=sent, wire=wire_total, psec=psec)
         if mode in ("compact", "tiered", "phased"):
             tele["chist"] = chist
             tele["pairs"] = pairs_acc
@@ -1571,6 +1604,9 @@ class GopherEngine:
         chist[0] = int(pairs_acc.sum())
         sent = int(nsent0)
         qsteps = np.zeros(Q, np.int64) if Q is not None else None
+        psec = np.zeros(num_parts, np.float64)
+        part_verts = tuple(int(x) for x in
+                           np.asarray(self.pg.vmask, bool).sum(1))
 
         with tr.span("prime") as sp:
             # no routed prime on the fused route: round 0's sends are
@@ -1584,8 +1620,11 @@ class GopherEngine:
         with tr.span("phase", index=0, boundary=-1):
             while not done and step < max_s:
                 with tr.span("superstep", step=step) as ss:
-                    _faults.fire("engine.superstep", step=step,
-                                 backend=self.backend)
+                    t0 = time.perf_counter()
+                    eff = _faults.fire("engine.superstep", step=step,
+                                       backend=self.backend,
+                                       part_verts=part_verts,
+                                       num_devices=1)
                     with tr.span("megastep"):
                         flat, li, pairs, nsent, chinfo = fns["step"](
                             gb, cma, flat, jnp.int32(step))
@@ -1604,6 +1643,13 @@ class GopherEngine:
                             any_changed = bool(changed_q.any())
                             qsteps[changed_q] = step + 1
                     tr.count("dispatches", 1)   # whole superstep: 1 launch
+                    dt = time.perf_counter() - t0
+                    stalls = (eff or {}).get("stalls", [])
+                    inj = sum(s for p, s in stalls if 0 <= p < num_parts)
+                    psec += max(dt - inj, 0.0) / num_parts
+                    for p, s in stalls:
+                        if 0 <= p < num_parts:
+                            psec[p] += s
                     liters += li_np
                     hist[step] = nchanged
                     chist[step + 1] = int(p.sum())
@@ -1614,7 +1660,7 @@ class GopherEngine:
                     done = not any_changed
 
         tele = dict(liters=liters, hist=hist, whist=whist, sent=sent,
-                    wire=0, chist=chist, pairs=pairs_acc)
+                    wire=0, chist=chist, pairs=pairs_acc, psec=psec)
         if Q is not None:
             tele["qsteps"] = qsteps
         return fns["finish"](flat), step, tele
@@ -1676,6 +1722,8 @@ class GopherEngine:
             count_hist=(np.asarray(tele["chist"])[:steps + 1]
                         if "chist" in tele else None),
         )
+        if "psec" in tele:
+            t.part_seconds = np.asarray(tele["psec"], np.float64).reshape(-1)
         if phased:
             # phase buckets travel parts-leading (P, K, P); report (K, P, P)
             by_phase = np.transpose(pair_slots, (1, 0, 2))
@@ -1781,7 +1829,8 @@ class GopherEngine:
         return cached
 
     def _run_checkpointed(self, ck, every: int, resume: bool,
-                          extra: Optional[dict] = None):
+                          extra: Optional[dict] = None,
+                          superstep_budget: Optional[int] = None):
         """Checkpointable BSP: a host-stepped driver over the STAGED stage
         functions (Gopher Scope's init/sweep/pack/route jits — bit-identical
         to the fused loops), snapshotting (state, inbox, superstep) every
@@ -1805,7 +1854,9 @@ class GopherEngine:
             prev = self.exchange
             self.exchange = "compact"
             try:
-                return self._run_checkpointed(ck, every, resume, extra)
+                return self._run_checkpointed(
+                    ck, every, resume, extra,
+                    superstep_budget=superstep_budget)
             finally:
                 self.exchange = prev
         gb = self._graph_block()
@@ -1825,6 +1876,13 @@ class GopherEngine:
         chist = np.zeros(max_s + 1, np.int64)
         pairs_acc = np.zeros((num_parts, num_parts), np.int64)
         sent = wire_total = 0
+        # Gopher Balance time channel: injected stalls land on their target
+        # partition, the rest of each superstep's wall time spreads evenly
+        psec = np.zeros(num_parts, np.float64)
+        part_verts = tuple(int(x) for x in
+                           np.asarray(self.pg.vmask, bool).sum(1))
+        D = (1 if self.backend == "local"
+             else int(self.mesh.shape[self.axis_name]))
 
         good = None
         if resume:
@@ -1862,10 +1920,14 @@ class GopherEngine:
             primed = True
 
         start = step
+        budget = superstep_budget
         done = False
-        while not done and step < max_s:
-            _faults.fire("engine.superstep", step=step,
-                         backend=self.backend)
+        while not done and step < max_s and (budget is None
+                                             or step - start < budget):
+            t0 = time.perf_counter()
+            eff = _faults.fire("engine.superstep", step=step,
+                               backend=self.backend,
+                               part_verts=part_verts, num_devices=D)
             state, changed, li = fns["sweep"](gb, state, inbox,
                                               jnp.int32(step))
             payload, nsent, wire, ex = fns["pack"](gb, state)
@@ -1875,6 +1937,13 @@ class GopherEngine:
             ch = np.asarray(changed)
             nchanged = int(ch.sum())
             wire_i = int(rex["wire"]) if "wire" in rex else int(wire)
+            dt = time.perf_counter() - t0
+            stalls = (eff or {}).get("stalls", [])
+            inj = sum(s for p, s in stalls if 0 <= p < num_parts)
+            psec += max(dt - inj, 0.0) / num_parts
+            for p, s in stalls:
+                if 0 <= p < num_parts:
+                    psec[p] += s
             liters += np.asarray(li, np.int64)
             hist[step] = nchanged
             whist[step + 1] = wire_i
@@ -1886,14 +1955,15 @@ class GopherEngine:
                 chist[step + 1] = int(p.sum())
             step += 1
             done = nchanged == 0
-            if done or (step - start) % every == 0 or step >= max_s:
+            cut = budget is not None and step - start >= budget
+            if done or cut or (step - start) % every == 0 or step >= max_s:
                 ck.save({"state": state, "inbox": inbox}, step)
         # after a resume the wire counters cover only THIS process's
         # exchanges, so the byte model must count the same rounds (no prime
         # ran, and pre-resume supersteps shipped in the previous process)
         rounds = step - start + (1 if primed else 0)
         tele = dict(liters=liters, hist=hist, whist=whist, sent=sent,
-                    wire=wire_total)
+                    wire=wire_total, psec=psec)
         if self.exchange == "compact":
             tele["chist"] = chist
             tele["pairs"] = pairs_acc

@@ -594,6 +594,27 @@ class TierSchedule:
         the cross-device psum)."""
         return self.round_slots() // self.D
 
+    def kind_byte_budgets(self, num_queries: Optional[int]) -> dict:
+        """Per-HLO-collective-kind, PER-DEVICE byte ceilings of one exchange
+        round — what the Gopher Sentinel holds compiled wire collectives to.
+
+        ``all-to-all`` is the hot tier's uniform row block: every device
+        ships D destination blocks of ``hot_h`` dense rows, ``cap`` value
+        slots each. ``collective-permute`` is everything shifted — hot
+        residual rows (dense, no ids), warm rows (values + int32 slot-id
+        lanes) and cold singles (one value + one id) — summed over the
+        round's shifts, so the ceiling holds even when XLA combines several
+        ppermutes of a round into one instruction. The two budgets sum to
+        ``round_bytes(q) // D``: the per-kind split is a refinement of the
+        round total, not a second accounting."""
+        q = num_queries or 1
+        a2a = self.D * self.hot_h * self.cap * 4 * q
+        cp = sum(g * self.cap * 4 * q for _, g, _, _ in self.hot_res_shifts)
+        cp += sum(g * self.warm_cap * (4 * q + 4)
+                  for _, g, _, _ in self.warm_shifts)
+        cp += sum(g * (4 * q + 4) for _, g, _, _ in self.cold_shifts)
+        return {"all-to-all": a2a, "collective-permute": cp}
+
 
 def announce_frontier(host_gb: dict, pg, dirty: np.ndarray) -> None:
     """Pre-announce a delta's dirty frontier into the block's ``wire_ewma``

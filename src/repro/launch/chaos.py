@@ -21,6 +21,12 @@ allclose for PageRank):
                       bit-identical results (stalls cost time, never math)
     poisoned_query    a batch run is poisoned; the retry serves the batch
                       with no client-visible error
+    skew_heal         a load-proportional straggler pins one partition; the
+                      Gopher Balance actuator migrates its sub-graphs off,
+                      the imbalance score drops >=2x, only the PLANNED
+                      sub-graphs move (no full re-partition), and results
+                      match the fault-free run (also writes
+                      BENCH_balance.json next to the main report)
 
 Writes a machine-readable BENCH_chaos.json and exits non-zero if any
 scenario failed its recovery or parity gate — the CI ``chaos-smoke`` job
@@ -40,7 +46,7 @@ import tempfile
 import time
 
 _ALL = ("device_loss", "corrupt_snapshot", "failed_delta", "corrupt_block",
-        "straggler", "poisoned_query")
+        "straggler", "poisoned_query", "skew_heal")
 
 
 def _parse(argv=None):
@@ -279,6 +285,93 @@ def scenario_poisoned_query(args):
             "recoveries": st["recoveries"], "fired": plan.record()}
 
 
+def _skew_graph(args):
+    """A deliberately skewed layout the actuator can actually heal:
+    partition 0 holds TWO non-adjacent 2-column strips of a road grid
+    (two whole local sub-graphs with real cut edges), partitions 1 and 2
+    are half-full (free slots = migration headroom), partition 3 is full
+    — so healing means draining partition 0 into 1 and 2, one sub-graph
+    per move, and nothing else is allowed to change."""
+    import numpy as np
+    from repro.gofs import road_grid
+    from repro.gofs.formats import partition_graph
+    rows, cols = 6, 12
+    g = road_grid(rows, cols, drop_frac=0.0, seed=args.seed, weighted=True)
+    strip = (np.arange(rows * cols) % cols) // 2
+    assign = np.asarray([0, 1, 2, 0, 3, 3], np.int32)[strip]
+    return g, partition_graph(g, assign, 4)
+
+
+def scenario_skew_heal(args):
+    """Straggler pins partition 0 -> live migration drains it; gates:
+    imbalance drops >=2x, results match the fault-free run, and ONLY the
+    planned sub-graphs moved (no full re-partition)."""
+    import numpy as np
+    from repro.core import GopherEngine
+    from repro.resilience import faults
+    from repro.resilience.balance import (BalancePolicy, run_with_rebalance,
+                                          to_global)
+    from repro.training.checkpoint import Checkpointer
+    _, pg = _skew_graph(args)
+    part0 = np.asarray(pg.part_of).copy()
+    algos = ("cc",) if args.quick else ("cc", "pagerank")
+    out = {"ok": True, "algos": {}}
+    for algo in algos:
+        prog = _program(algo, pg)
+        ref, _ = GopherEngine(pg, prog, backend="local",
+                              exchange="dense").run()
+        ref_g = to_global(ref, pg)
+        plan = faults.FaultPlan([faults.FaultSpec(
+            "engine.superstep", "straggler", prob=1.0, times=9999,
+            delay_s=0.008, payload={"part": 0})], seed=args.seed)
+        eng = GopherEngine(pg, prog, backend="local", exchange="compact")
+        # sub-graph-centric cc converges in quotient-graph-diameter
+        # supersteps (~5 here), so decide EVERY superstep: two moves drain
+        # partition 0 early enough that the final segment runs stall-free
+        pol = BalancePolicy(threshold=1.3, floor=1.05,
+                            max_verts_per_step=12, check_every=1,
+                            cooldown_segments=0)
+        with tempfile.TemporaryDirectory() as d:
+            with faults.inject(plan):
+                eng2, state, tele, rep = run_with_rebalance(
+                    eng, Checkpointer(d), every=1, policy=pol)
+        parity = _state_parity(to_global(state, eng2.pg), ref_g,
+                               exact=algo != "pagerank")
+        # only the planned sub-graphs moved, along the planned routes
+        part1 = np.asarray(eng2.pg.part_of)
+        changed = np.nonzero(part0 != part1)[0]
+        routes = {(m["src"], m["dst"]) for m in rep.migrations}
+        moved_ok = (len(changed) == rep.moved_verts()
+                    and all((int(part0[g]), int(part1[g])) in routes
+                            for g in changed))
+        ratio = rep.imbalance_before / max(rep.imbalance_after, 1e-9)
+        drained = int(np.sum(part1 == 0)) == 0
+        ok = (parity and moved_ok and rep.rollbacks == 0
+              and len(rep.migrations) >= 1 and ratio >= 2.0
+              and eng2.pg.num_parts == pg.num_parts)
+        out["algos"][algo] = {
+            "parity": parity, "migrations": rep.migrations,
+            "rollbacks": rep.rollbacks, "segments": rep.segments,
+            "moved_verts": rep.moved_verts(),
+            "moved_only_planned": moved_ok, "victim_drained": drained,
+            "imbalance_before": round(rep.imbalance_before, 3),
+            "imbalance_after": round(rep.imbalance_after, 3),
+            "imbalance_drop": round(ratio, 3),
+            "supersteps": int(tele.supersteps), "stalls": len(plan.record()),
+        }
+        out["ok"] = out["ok"] and ok
+    bench = os.path.join(
+        os.path.dirname(os.path.abspath(args.out)), "BENCH_balance.json")
+    with open(bench, "w") as f:
+        json.dump({"scenario": "skew_heal", "quick": bool(args.quick),
+                   "gates": {"min_imbalance_drop": 2.0,
+                             "parity": "exact (cc) / allclose (pagerank)",
+                             "moved_only_planned": True},
+                   "algos": out["algos"]}, f, indent=1)
+    out["bench"] = bench
+    return out
+
+
 _SCENARIOS = {
     "device_loss": scenario_device_loss,
     "corrupt_snapshot": scenario_corrupt_snapshot,
@@ -286,6 +379,7 @@ _SCENARIOS = {
     "corrupt_block": scenario_corrupt_block,
     "straggler": scenario_straggler,
     "poisoned_query": scenario_poisoned_query,
+    "skew_heal": scenario_skew_heal,
 }
 
 

@@ -68,20 +68,42 @@ def shrink_after_failure(old: MeshPlan, lost_chips: int) -> MeshPlan:
     return MeshPlan((data, model), ("data", "model"))
 
 
-def rebalance_hint(skew: dict, threshold: float = 1.5) -> Optional[dict]:
+def rebalance_hint(skew: dict, threshold: float = 1.5,
+                   floor: float = 1.1,
+                   acting: bool = False) -> Optional[dict]:
     """Gopher Scope feedback for the elastic layer: given a live skew report
     (``Telemetry.skew()`` / ``SkewTracker.report()``), decide whether the
     virtual-partition layout is worth re-balancing and which partition to
     shed load FROM. GoFS partition count is decoupled from device count, so
     acting on the hint is a repartition/migration, not a mesh change.
-    Returns ``None`` while the imbalance score (max/mean — the
-    wasted-speedup factor under the superstep barrier) stays at or below
-    ``threshold``."""
-    imb = float(skew.get("imbalance", 0.0))
-    if imb <= threshold:
+
+    Two load signals are read and the WORSE one wins: the iteration channel
+    (``imbalance``/``straggler`` — structural compute skew) and the wall-
+    clock channel (``time_imbalance``/``time_straggler`` — a physically
+    slow device shows up here even when iteration counts stay flat).
+
+    Hysteresis so an actuator driven by this hint cannot oscillate: an IDLE
+    caller trips only above ``threshold``; a caller that is already
+    migrating (``acting=True``) keeps getting a hint until the score falls
+    to the ``floor`` — the balanced band — so a heal drains fully instead
+    of stopping the moment it dips under the trip point and re-tripping
+    next window. On a balanced mesh (score at or below the floor) the hint
+    is ALWAYS ``None``: no victim partition is named when there is nothing
+    to shed."""
+    imb_it = float(skew.get("imbalance", 0.0))
+    imb_t = float(skew.get("time_imbalance", 0.0))
+    use_time = imb_t > imb_it
+    imb = imb_t if use_time else imb_it
+    gate = max(float(floor), 1.0) if acting else max(float(threshold),
+                                                     float(floor))
+    if imb <= gate:
         return None
-    return dict(migrate_from=int(skew.get("straggler", -1)),
-                imbalance=imb,
+    src = int(skew.get("time_straggler", -1) if use_time
+              else skew.get("straggler", -1))
+    if src < 0:
+        return None
+    return dict(migrate_from=src, imbalance=imb,
+                signal="time" if use_time else "iters",
                 wasted_speedup_pct=round((1.0 - 1.0 / imb) * 100.0, 1))
 
 

@@ -129,34 +129,40 @@ def _hlo_cross_check(entry, eng, summary, violations):
     rep = Analyzer(text).collective_report()
     hlo_counts = {k: v["count"] for k, v in rep.items()}
     hlo_bytes = {k: v["bytes"] for k, v in rep.items()}
-    # per-collective byte budget: no single wire collective may ship more
-    # than the tier plan's predicted per-device ROUND geometry. One loop
-    # body routes exactly one exchange round, so even if XLA combines every
-    # wire collective of a round into one instruction the result stays
-    # within the round's per-device share — anything larger means the
-    # compiled loop ships bytes the plan never predicted.
+    # per-KIND byte budgets: no wire collective may ship more than the tier
+    # plan's predicted per-device geometry FOR ITS OWN KIND — the hot
+    # uniform block bounds every all_to_all, the round's summed shifts
+    # bound every ppermute (summed, not per-shift, so the ceiling holds
+    # when XLA combines a round's ppermutes into one instruction). An
+    # instruction over its kind budget means the compiled loop ships
+    # traffic the plan's wire geometry never predicted.
     from repro.core import PhasedTierPlan
     plan = eng.tier_plan
     plans = (plan.phase_plans() if isinstance(plan, PhasedTierPlan)
              else (plan,))
-    budget = max(p.schedule(D).round_bytes(None) // D for p in plans)
+    budgets: dict = {}
+    for p in plans:
+        for k, b in p.schedule(D).kind_byte_budgets(None).items():
+            budgets[k] = max(budgets.get(k, 0), b)
     if isinstance(plan, PhasedTierPlan):
         # the phased loop carries a per-superstep dense-retry cond branch;
-        # its all_to_all legitimately ships the DENSE round, so the ceiling
-        # for a phased loop is the dense per-device geometry
+        # its all_to_all legitimately ships the DENSE round, so the
+        # all-to-all ceiling for a phased loop is the dense per-device
+        # geometry
         P = plan.num_parts
-        budget = max(budget, (P // D) * P * plan.cap * 4)
-    over = [(ci.name, ci.result_bytes)
+        budgets["all-to-all"] = max(budgets.get("all-to-all", 0),
+                                    (P // D) * P * plan.cap * 4)
+    over = [(ci.name, ci.result_bytes, k, budgets[k])
             for k in ("all-to-all", "collective-permute") if k in rep
-            for ci in rep[k]["instrs"] if ci.result_bytes > budget]
+            for ci in rep[k]["instrs"] if ci.result_bytes > budgets.get(k, 0)]
     if over:
         violations.append(Violation(
             pass_name="collectives", code="HLO_BYTE_BUDGET",
             where=f"{entry['algo']}/{entry['exchange']}/D={D}",
             detail=(f"wire collectives {over} exceed the tier plan's "
-                    f"per-device round budget of {budget} bytes — the "
-                    "compiled loop ships traffic the plan's wire geometry "
-                    "never predicted"),
+                    "per-device per-kind byte budgets (name, bytes, kind, "
+                    "budget) — the compiled loop ships traffic the plan's "
+                    "wire geometry never predicted"),
             severity=ERROR))
     want_kinds = set(summary.expected_hlo_kinds())
     got_kinds = set(rep)
@@ -183,7 +189,7 @@ def _hlo_cross_check(entry, eng, summary, violations):
     entry["hlo"] = {
         "kinds": sorted(got_kinds), "counts": hlo_counts,
         "bytes": hlo_bytes, "jaxpr_counts": want_counts,
-        "byte_budget": budget, "within_byte_budget": not over,
+        "byte_budgets": dict(budgets), "within_byte_budget": not over,
         "agrees_kinds": agrees_kinds, "agrees_counts": agrees_counts,
     }
 

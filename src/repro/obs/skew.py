@@ -60,9 +60,10 @@ def pair_skew(pair_slots: Optional[np.ndarray]) -> dict:
 
 
 def skew_report(telemetry=None, local_iters: Optional[np.ndarray] = None,
-                pair_slots: Optional[np.ndarray] = None) -> dict:
+                pair_slots: Optional[np.ndarray] = None,
+                part_seconds: Optional[np.ndarray] = None) -> dict:
     """The per-run skew report. Pass a ``Telemetry`` (preferred — reads
-    local_iters + pair_slots off it) or the raw arrays.
+    local_iters + pair_slots + part_seconds off it) or the raw arrays.
 
     Keys:
       imbalance       max/mean of per-partition sweep iterations — the
@@ -71,11 +72,18 @@ def skew_report(telemetry=None, local_iters: Optional[np.ndarray] = None,
       cv              coefficient of variation of the load vector
       mean_iters / max_iters
       wire            pair_skew() of the per-pair slot matrix (None-safe)
+      time_imbalance  max/mean of per-partition WALL seconds (Gopher
+      time_straggler  Balance's channel: an injected or physical straggler
+                      shows up here even when iteration counts stay flat).
+                      0.0 / -1 when the run carried no time channel (fused
+                      single-dispatch loops).
     """
     if telemetry is not None:
         local_iters = telemetry.local_iters
         pair_slots = telemetry.pair_slots if pair_slots is None \
             else pair_slots
+        if part_seconds is None:
+            part_seconds = getattr(telemetry, "part_seconds", None)
     li = (np.asarray(local_iters, np.float64).reshape(-1)
           if local_iters is not None else np.zeros(0))
     if li.size and np.any(li > 0):
@@ -87,6 +95,15 @@ def skew_report(telemetry=None, local_iters: Optional[np.ndarray] = None,
     else:
         rep = dict(imbalance=0.0, straggler=-1, cv=0.0, mean_iters=0.0,
                    max_iters=0)
+    ps = (np.asarray(part_seconds, np.float64).reshape(-1)
+          if part_seconds is not None else np.zeros(0))
+    if ps.size and np.any(ps > 0):
+        rep["time_imbalance"] = round(float(ps.max() / ps.mean()), 4)
+        rep["time_straggler"] = int(ps.argmax())
+        rep["part_seconds"] = [round(float(x), 6) for x in ps]
+    else:
+        rep["time_imbalance"] = 0.0
+        rep["time_straggler"] = -1
     rep["wire"] = pair_skew(pair_slots)
     return rep
 
@@ -104,6 +121,9 @@ class SkewTracker:
         self.liters: Optional[np.ndarray] = (
             np.zeros(num_parts, np.float64) if num_parts else None)
         self.pair_slots: Optional[np.ndarray] = None
+        # wall-seconds channel (Telemetry.part_seconds): Gopher Balance's
+        # straggler evidence — None until a host-stepped run reports it
+        self.seconds: Optional[np.ndarray] = None
 
     def observe(self, telemetry) -> None:
         li = np.asarray(telemetry.local_iters, np.float64).reshape(-1)
@@ -114,19 +134,30 @@ class SkewTracker:
         else:
             self.liters = li.copy()
             self.pair_slots = None
+            self.seconds = None
         if telemetry.pair_slots is not None:
             ps = np.asarray(telemetry.pair_slots, np.float64)
             if self.pair_slots is None or self.pair_slots.shape != ps.shape:
                 self.pair_slots = np.zeros_like(ps)
             self.pair_slots = self.decay * self.pair_slots + ps
+        sec = getattr(telemetry, "part_seconds", None)
+        if sec is not None:
+            sec = np.asarray(sec, np.float64).reshape(-1)
+            if self.seconds is None or self.seconds.size != sec.size:
+                self.seconds = np.zeros_like(sec)
+            self.seconds = self.decay * self.seconds + sec
         self.runs += 1
 
     def imbalance(self) -> float:
         return round(imbalance_score(self.liters), 4)
 
+    def time_imbalance(self) -> float:
+        return round(imbalance_score(self.seconds), 4)
+
     def report(self) -> dict:
         rep = skew_report(local_iters=self.liters,
-                          pair_slots=self.pair_slots)
+                          pair_slots=self.pair_slots,
+                          part_seconds=self.seconds)
         rep["runs"] = self.runs
         if self.liters is not None:
             rep["per_partition_iters"] = [round(float(x), 1)

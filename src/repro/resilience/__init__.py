@@ -25,12 +25,20 @@ __all__ = [
     "InjectedFault", "PoisonedQueryFault", "backoff_delays", "faults",
     "recover", "run_with_recovery", "run_with_failover", "shrink_parts_mesh",
     "RecoveryExhausted", "RecoveryReport",
+    "BalancePolicy", "MigrationPlan", "MigrationResult", "RebalanceReport",
+    "apply_migration", "migrate_and_resume", "plan_migration",
+    "run_with_rebalance", "to_global",
 ]
 
 _LAZY = {
     "recover": "recovery", "run_with_recovery": "recovery",
     "RecoveryExhausted": "recovery", "RecoveryReport": "recovery",
     "run_with_failover": "failover", "shrink_parts_mesh": "failover",
+    "BalancePolicy": "balance", "MigrationPlan": "balance",
+    "MigrationResult": "balance", "RebalanceReport": "balance",
+    "apply_migration": "balance", "migrate_and_resume": "balance",
+    "plan_migration": "balance", "run_with_rebalance": "balance",
+    "to_global": "balance",
 }
 
 

@@ -85,12 +85,48 @@ _RAISES = {
 }
 
 
+def _straggler_stalls(spec: "FaultSpec", ctx: dict) -> list:
+    """Sleep out one straggler firing and return its [(part, seconds)]
+    attribution. Targeted specs (payload ``part``/``device``) stall
+    ``delay_s`` per live vertex of each targeted partition — read from the
+    ``part_verts`` tuple in the fire context (the engine's stepped drivers
+    pass it; ``num_devices`` maps a device target onto its contiguous
+    partition rows, the same P//D tiling failover uses). Untargeted specs,
+    or sites that don't carry ``part_verts``, keep the flat legacy sleep
+    attributed to no partition (part -1)."""
+    pv = ctx.get("part_verts")
+    t_part = spec.payload.get("part")
+    t_dev = spec.payload.get("device")
+    if pv is None or (t_part is None and t_dev is None):
+        time.sleep(spec.delay_s)
+        return [(-1, float(spec.delay_s))]
+    P = len(pv)
+    if t_part is not None:
+        parts = [int(t_part) % P]
+    else:
+        D = max(int(ctx.get("num_devices", 1)), 1)
+        per = max(P // D, 1)
+        d = int(t_dev) % D
+        parts = list(range(d * per, min((d + 1) * per, P)))
+    stalls = [(p, float(spec.delay_s) * float(pv[p])) for p in parts]
+    time.sleep(sum(s for _, s in stalls))
+    return stalls
+
+
 @dataclasses.dataclass
 class FaultSpec:
     """One fault to fire: WHERE (site), WHAT (kind), WHEN (at= exact visit
     index, else per-visit probability), and HOW OFTEN (times, then the spec
     disarms). ``delay_s`` is the stall for straggler faults; ``payload``
-    rides on the raised exception (e.g. ``lost=1`` devices)."""
+    rides on the raised exception (e.g. ``lost=1`` devices).
+
+    Straggler payloads may target ``{"part": p}`` (one partition) or
+    ``{"device": d}`` (that device's contiguous partition rows). A targeted
+    straggler's stall is LOAD-PROPORTIONAL — ``delay_s`` seconds PER LIVE
+    VERTEX on the targeted partitions (read from the ``part_verts`` fire
+    context) — so migrating sub-graphs off the victim physically shrinks
+    the injected delay, the way a real per-device slowdown would respond.
+    An untargeted straggler keeps the legacy flat ``delay_s`` sleep."""
     site: str
     kind: str
     at: Optional[int] = None
@@ -125,12 +161,19 @@ class FaultPlan:
     def visits(self, site: str) -> int:
         return self._visits[site]
 
-    def fire(self, site: str, **ctx) -> None:
+    def fire(self, site: str, **ctx) -> Optional[dict]:
         """One visit to `site`: decide per armed spec whether it fires.
         Stragglers sleep; every other kind raises its typed fault (the
-        FIRST matching spec wins the raise; its shot is spent either way)."""
+        FIRST matching spec wins the raise; its shot is spent either way).
+
+        Returns an EFFECTS dict for non-raising faults so the host driver
+        can account for them — ``{"stalls": [(part, seconds), ...]}`` with
+        ``part == -1`` for an untargeted stall — or None when nothing
+        non-raising fired. The stall record is what makes injected skew
+        VISIBLE to the time channel of ``obs.skew`` (Gopher Balance)."""
         visit = self._visits[site]
         self._visits[site] = visit + 1
+        effects: Optional[dict] = None
         for i, spec in enumerate(self.specs):
             if spec.site != site or self._remaining[i] <= 0:
                 continue
@@ -142,16 +185,21 @@ class FaultPlan:
             if not hit:
                 continue
             self._remaining[i] -= 1
-            self.fired.append(dict(site=site, kind=spec.kind, visit=visit,
-                                   payload=dict(spec.payload),
-                                   ctx={k: v for k, v in ctx.items()
-                                        if isinstance(v, (int, float, str,
-                                                          bool))}))
+            rec = dict(site=site, kind=spec.kind, visit=visit,
+                       payload=dict(spec.payload),
+                       ctx={k: v for k, v in ctx.items()
+                            if isinstance(v, (int, float, str, bool))})
+            self.fired.append(rec)
             if spec.kind == "straggler":
-                time.sleep(spec.delay_s)
+                stalls = _straggler_stalls(spec, ctx)
+                rec["stall_s"] = round(sum(s for _, s in stalls), 6)
+                if effects is None:
+                    effects = {"stalls": []}
+                effects["stalls"].extend(stalls)
                 continue
             raise _RAISES[spec.kind](site, spec.kind, visit, spec.payload,
                                      ctx)
+        return effects
 
     def record(self) -> list:
         """What fired so far, JSON-serializable."""
@@ -185,10 +233,13 @@ def inject(plan: Optional[FaultPlan]):
         stack.pop()
 
 
-def fire(site: str, **ctx) -> None:
+def fire(site: str, **ctx) -> Optional[dict]:
     """The hook entry compiled into NOTHING when no plan is armed: sites
     call this unconditionally; it returns immediately unless a FaultPlan is
-    active on this thread."""
+    active on this thread. Forwards the plan's effects dict (straggler
+    stall attributions) so the host driver can charge injected delay to the
+    right partition's time channel."""
     plan = active()
     if plan is not None:
-        plan.fire(site, **ctx)
+        return plan.fire(site, **ctx)
+    return None

@@ -85,6 +85,10 @@ class ServiceStats:
     breaker_opens: int = 0           # circuit-breaker open transitions
     degraded_batches: int = 0        # batches answered with a typed error
                                      # instead of a client-facing exception
+    # Gopher Balance live-migration counters
+    migrations: int = 0              # skew-healing migrations installed
+    migration_rollbacks: int = 0     # patched blocks that failed the audit
+                                     # (pre-migration version kept serving)
     # bounded windows: long-running services must not grow without limit
     lane_fill: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=1024))
@@ -138,7 +142,9 @@ class ServiceStats:
             recoveries=self.recoveries,
             stale_served=self.stale_served,
             breaker_opens=self.breaker_opens,
-            degraded_batches=self.degraded_batches)
+            degraded_batches=self.degraded_batches,
+            migrations=self.migrations,
+            migration_rollbacks=self.migration_rollbacks)
         svc = self._service
         if svc is not None:
             out["imbalance"] = {g: t.imbalance()
@@ -371,6 +377,81 @@ class GraphQueryService:
         if lc is not None:
             reg.gauge("serving_landmark_stale_frac",
                       labels={"graph": name}).set(lc.stale_frac_ewma)
+        return res
+
+    def rebalance(self, name: str, policy=None):
+        """Gopher Balance on the serving path: read the graph's live
+        :class:`SkewTracker`, ask ``launch.elastic.rebalance_hint`` whether
+        the partition layout is worth healing, and if so migrate sub-graphs
+        off the straggler partition through the same synthetic-delta
+        machinery ``apply_delta`` uses — ``patch_host_block`` on the host
+        twin, O(moved cut), no re-partition.
+
+        The move rides the STALE-SERVING discipline: version v keeps
+        answering every query until the patched block passes its
+        ``verify_host_block`` audit; a failed audit installs NOTHING
+        (``stats.migration_rollbacks`` counts it, the graph's circuit
+        breaker records the failure) and v serves on. On success the
+        patched version installs exactly like a delta (update_graph +
+        block twins) and ``stats.migrations`` ticks.
+
+        Returns the ``MigrationResult`` when a migration installed, else
+        None (balanced graph, nothing movable, or rolled back)."""
+        from repro.launch import elastic
+        from repro.resilience.balance import (BalancePolicy, apply_migration,
+                                              plan_migration)
+
+        pol = policy or BalancePolicy()
+        tracker = self.skew.get(name)
+        pg = self.graphs.get(name)
+        if tracker is None or pg is None:
+            return None
+        rep = tracker.report()
+        hint = elastic.rebalance_hint(rep, threshold=pol.threshold,
+                                      floor=pol.floor)
+        if hint is None:
+            return None
+        load = (tracker.seconds
+                if tracker.seconds is not None
+                and np.any(tracker.seconds > 0) else tracker.liters)
+        plan = plan_migration(pg, src=int(hint["migrate_from"]),
+                              budget=pol.max_verts_per_step, load=load)
+        if plan is None:
+            return None
+        host_gb = self._host_gb.get(name)
+        if host_gb is None:
+            host_gb = host_graph_block(pg)
+        try:
+            res = apply_migration(pg, plan, host_gb=host_gb)
+            problems = verify_host_block(res.block)
+        except _faults.BlockCorruptionFault as e:
+            problems = [str(e)]
+            res = None
+        if problems:
+            # rollback is free: nothing was installed, version v serves on
+            self.stats.migration_rollbacks += 1
+            br = self.breakers.get(name)
+            if br is None:
+                br = self.breakers[name] = CircuitBreaker(
+                    threshold=self.breaker_threshold,
+                    cooldown_s=self.breaker_cooldown_s, clock=self.clock)
+            br.record_failure()
+            self.metrics.counter("serving_migration_rollbacks_total",
+                                 labels={"graph": name}).inc()
+            return None
+        self.update_graph(name, res.pg)
+        self._host_gb[name] = res.block
+        self._gb[name] = device_block(res.block)
+        # the accumulated load picture described the PRE-move layout; reset
+        # so the next decision reads post-move telemetry, not stale skew
+        self.skew[name] = SkewTracker(num_parts=pg.num_parts,
+                                      decay=tracker.decay)
+        self.stats.migrations += 1
+        self.metrics.counter(
+            "serving_migrations_total",
+            labels={"graph": name, "signal": hint.get("signal", "")}).inc()
+        if self.warm_start:
+            self.warm(name)
         return res
 
     def landmark_telemetry(self, name: str) -> Optional[dict]:

@@ -27,8 +27,17 @@ from repro.core import (  # noqa: E402
     verify_host_block,
 )
 from repro.gofs.formats import PAD, partition_graph  # noqa: E402
-from repro.gofs.generators import random_graph  # noqa: E402
+from repro.gofs.generators import random_graph, road_grid  # noqa: E402
 from repro.gofs.partition import bfs_grow_partition  # noqa: E402
+from repro.launch.elastic import rebalance_hint  # noqa: E402
+from repro.resilience.balance import (  # noqa: E402
+    BalancePolicy,
+    apply_migration,
+    migrate_and_resume,
+    plan_migration,
+    run_with_rebalance,
+    to_global,
+)
 from repro.gofs.temporal import (  # noqa: E402
     DeltaValidationError,
     EdgeDelta,
@@ -481,3 +490,260 @@ def test_verify_host_block_clean_and_corrupt():
     bad3 = dict(hb)
     del bad3["ob_inv"]
     assert any("ob_inv" in p for p in verify_host_block(bad3))
+
+
+# --------------------------------------------- Gopher Balance: migration
+
+def _strip_pg(rows=6, cols=12, weighted=True, seed=0):
+    """road_grid in 2-column vertical strips; strips 0 and 3 (NOT adjacent)
+    fold into partition 0, so it holds TWO local sub-graphs with real cut
+    edges, while partitions 1 and 2 run half-full — v_max slack to migrate
+    into (bfs_grow layouts are single-sub-graph and slack-free, useless for
+    migration tests)."""
+    g = road_grid(rows, cols, drop_frac=0.0, seed=seed, weighted=weighted)
+    strip = (np.arange(rows * cols) % cols) // 2
+    assign = np.asarray([0, 1, 2, 0, 3, 3], np.int32)[strip]
+    return partition_graph(g, assign, 4)
+
+
+_MREF = {}
+
+
+def _strip_ref(algo):
+    """Fault-free, migration-free reference in GLOBAL vertex order."""
+    if algo not in _MREF:
+        pg = _strip_pg()
+        state, _ = GopherEngine(pg, _prog(algo, pg), backend="local",
+                                exchange="dense").run()
+        _MREF[algo] = to_global(state, pg)
+    return _MREF[algo]
+
+
+def _geq(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return (len(la) == len(lb)
+            and all(np.array_equal(np.asarray(x), np.asarray(y))
+                    for x, y in zip(la, lb)))
+
+
+def test_rebalance_hint_threshold_and_hysteresis():
+    base = dict(imbalance=1.3, straggler=0, time_imbalance=0.0,
+                time_straggler=-1)
+    assert rebalance_hint(base) is None             # under the trip point
+    h = rebalance_hint(dict(base, imbalance=1.8))
+    assert h["migrate_from"] == 0 and h["signal"] == "iters"
+    # hysteresis: while acting, the band between floor and threshold still
+    # hints, so a heal drains fully instead of re-tripping next window
+    assert rebalance_hint(base, acting=True)["migrate_from"] == 0
+    # balanced mesh (at/below floor): ALWAYS None, even while acting
+    assert rebalance_hint(dict(base, imbalance=1.05), acting=True) is None
+    assert rebalance_hint(dict(base, imbalance=1.0)) is None
+    # the worse channel wins: wall-clock straggler beats flat iterations
+    h2 = rebalance_hint(dict(base, time_imbalance=2.5, time_straggler=3))
+    assert h2["migrate_from"] == 3 and h2["signal"] == "time"
+    # tripped but no victim named -> no hint
+    assert rebalance_hint(dict(imbalance=9.9, straggler=-1)) is None
+
+
+def test_targeted_straggler_lands_in_part_seconds():
+    """The upgraded straggler fault: a {'part': p} payload stalls delay_s
+    per live vertex of p, and the checkpointed driver charges the stall to
+    p's wall-clock channel — visible in Telemetry.skew()."""
+    pg = _strip_pg()
+    eng = GopherEngine(pg, _prog("cc", pg), backend="local",
+                       exchange="compact")
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("engine.superstep", "straggler", prob=1.0,
+                          times=9999, delay_s=0.001, payload={"part": 2})])
+    with tempfile.TemporaryDirectory() as d:
+        with faults.inject(plan):
+            state, tele = eng.run(checkpointer=Checkpointer(d),
+                                  checkpoint_every=1)
+    assert tele.part_seconds is not None
+    assert int(np.argmax(tele.part_seconds)) == 2
+    skew = tele.skew()
+    assert skew["time_straggler"] == 2 and skew["time_imbalance"] > 1.5
+    assert _geq(to_global(state, pg), _strip_ref("cc"))
+    assert len(plan.fired) == tele.supersteps  # one stall per superstep
+
+
+def test_plan_migration_budget_and_capacity():
+    pg = _strip_pg()                    # sub-graphs of 12; parts 1,2 half-full
+    assert plan_migration(pg, src=0, budget=11) is None   # atomic sub-graph
+    p = plan_migration(pg, src=0, budget=12)
+    assert p is not None and p.verts == 12 and len(p.subgraphs) == 1
+    assert p.dst in (1, 2)              # lightest partitions with free slots
+    # budget 24 but only 12 free slots at any dst: still one sub-graph
+    assert plan_migration(pg, src=0, budget=24).verts == 12
+    # a FULL destination can absorb nothing
+    assert plan_migration(pg, src=0, budget=12, dst=3) is None
+    assert plan_migration(pg, src=0, budget=12, dst=0) is None
+    assert plan_migration(pg, src=9, budget=12) is None   # no such partition
+
+
+def test_apply_migration_audits_and_moves_only_planned():
+    """Non-adjacent destination: out-edges re-allocate at dst, in-edges
+    retarget in place, and ONLY the planned sub-graph's vertices change
+    owner. The patched block passes the structural audit and both cc and
+    sssp converge bit-identical in global order."""
+    pg = _strip_pg()
+    hb = host_graph_block(pg)
+    plan = plan_migration(pg, src=0, budget=12, dst=2)
+    res = apply_migration(pg, plan, host_gb=hb)
+    assert verify_host_block(res.block) == []
+    assert res.stats["out_moved"] > 0 and res.stats["in_retargeted"] > 0
+    changed = np.flatnonzero(np.asarray(pg.part_of)
+                             != np.asarray(res.pg.part_of))
+    assert set(changed.tolist()) == set(res.moved_gids.tolist())
+    assert res.pg.version == pg.version + 1
+    # fresh runs on the migrated layout: sssp's init bakes the source
+    # vertex's (part, slot), so the program is RE-DERIVED from res.pg
+    for algo in ("cc", "sssp"):
+        state, _ = GopherEngine(res.pg, _prog(algo, res.pg),
+                                backend="local", exchange="compact").run()
+        assert _geq(to_global(state, res.pg), _strip_ref(algo))
+
+
+def _migration_case(algo, mode, backend, k, budget, dst):
+    """Run to superstep k, migrate (when a bounded plan exists), resume —
+    the final state must be bit-identical IN GLOBAL ORDER to the
+    migration-free run."""
+    pg = _strip_pg()
+    kw = {}
+    if backend == "shard_map":
+        kw = dict(mesh=compat.make_mesh((1,), ("parts",)))
+    eng = GopherEngine(pg, _prog(algo, pg), backend=backend, exchange=mode,
+                       **kw)
+    plan = plan_migration(pg, src=0, budget=budget, dst=dst)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        eng.run(checkpointer=ck, checkpoint_every=1, superstep_budget=k)
+        if plan is not None:
+            eng, res, at = migrate_and_resume(eng, ck, plan)
+        state, tele = eng.run(checkpointer=ck, checkpoint_every=1,
+                              resume=True)
+    assert _geq(to_global(state, eng.pg), _strip_ref(algo))
+    return plan
+
+
+@pytest.mark.parametrize("algo,mode,backend,k,budget,dst", [
+    ("cc", "dense", "local", 1, 12, None),
+    ("cc", "compact", "shard_map", 3, 12, 2),
+    ("cc", "megastep", "local", 2, 24, None),
+    ("cc", "tiered", "local", 4, 12, 1),
+    ("sssp", "compact", "local", 2, 12, 2),
+    ("sssp", "tiered", "shard_map", 1, 12, None),
+    ("sssp", "megastep", "local", 5, 12, 1),
+])
+def test_migration_superstep_corners(algo, mode, backend, k, budget, dst):
+    """Deterministic corners of the migrate-at-any-superstep property —
+    always run, even without hypothesis installed."""
+    plan = _migration_case(algo, mode, backend, k, budget, dst)
+    assert plan is not None             # corners are chosen to really move
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                    reason="property sweep needs hypothesis "
+                           "(requirements-dev.txt)")
+def test_migration_at_any_superstep_is_bit_identical():
+    """Gopher Balance acceptance property: ANY bounded migration plan at
+    ANY superstep, across exchange modes and backends, converges
+    bit-identical (global order) to the migration-free run."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(algo=st.sampled_from(["cc", "sssp"]),
+           mode=st.sampled_from(["dense", "compact", "megastep", "tiered"]),
+           backend=st.sampled_from(["local", "shard_map"]),
+           k=st.integers(1, 6),
+           budget=st.integers(8, 24),
+           dst=st.sampled_from([None, 1, 2, 3]))
+    def prop(algo, mode, backend, k, budget, dst):
+        assume(not (mode == "megastep" and backend == "shard_map"))
+        _migration_case(algo, mode, backend, k, budget, dst)
+
+    prop()
+
+
+def test_run_with_rebalance_heals_straggler_bit_identical():
+    """The closed loop: a load-proportional straggler on partition 0 trips
+    the hint, the actuator migrates sub-graphs off it between segments, and
+    the final state still matches the fault-free run bit-identically."""
+    pg = _strip_pg()
+    eng = GopherEngine(pg, _prog("cc", pg), backend="local",
+                       exchange="compact")
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("engine.superstep", "straggler", prob=1.0,
+                          times=9999, delay_s=0.002, payload={"part": 0})])
+    with tempfile.TemporaryDirectory() as d:
+        with faults.inject(plan):
+            eng2, state, tele, rep = run_with_rebalance(
+                eng, Checkpointer(d), every=1,
+                policy=BalancePolicy(threshold=1.3, floor=1.05,
+                                     max_verts_per_step=12, check_every=2))
+    assert _geq(to_global(state, eng2.pg), _strip_ref("cc"))
+    assert rep.migrations and rep.rollbacks == 0
+    assert all(m["src"] == 0 for m in rep.migrations)
+    assert rep.final_step == tele.supersteps
+    # the migrated engine serves fresh runs on the new layout too
+    st2, _ = eng2.run()
+    assert _geq(to_global(st2, eng2.pg), _strip_ref("cc"))
+
+
+def test_migration_rollback_on_corrupt_patch():
+    """An injected corrupt patch rolls back for free: nothing installs, the
+    pre-migration engine finishes from its own snapshot, parity holds."""
+    pg = _strip_pg()
+    eng = GopherEngine(pg, _prog("cc", pg), backend="local",
+                       exchange="compact")
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("engine.superstep", "straggler", prob=1.0,
+                          times=9999, delay_s=0.002, payload={"part": 0}),
+         faults.FaultSpec("blocks.patch", "corrupt_block", prob=1.0,
+                          times=9999)])
+    with tempfile.TemporaryDirectory() as d:
+        with faults.inject(plan):
+            eng2, state, tele, rep = run_with_rebalance(
+                eng, Checkpointer(d), every=1,
+                policy=BalancePolicy(threshold=1.3, floor=1.05,
+                                     max_verts_per_step=12, check_every=2))
+    assert rep.rollbacks >= 1 and not rep.migrations
+    assert all(f["kind"] == "corrupt_block" for f in rep.faults)
+    assert eng2 is eng and eng2.pg.version == pg.version
+    assert _geq(to_global(state, eng2.pg), _strip_ref("cc"))
+
+
+def test_service_rebalance_rides_stale_serving():
+    """svc.rebalance: a skewed tracker triggers a live migration behind the
+    serving path — answers are identical across the move, a corrupt patch
+    rolls back (version v keeps serving), and the counters tick."""
+    from repro.obs.skew import SkewTracker
+
+    pg = _strip_pg()
+    svc = GraphQueryService({"g": pg}, retry_base_s=0.001)
+    r0 = svc.query("sssp", "g", [0])
+    assert r0.error is None
+    skewed = type("T", (), {})()
+    skewed.local_iters = np.array([40.0, 10.0, 10.0, 10.0])
+    skewed.pair_slots = None
+    skewed.part_seconds = np.array([4.0, 0.5, 0.5, 0.5])
+    tr = svc.skew.setdefault("g", SkewTracker(num_parts=4))
+    tr.observe(skewed)
+    # corrupt patch first: rollback, version unchanged, still answering
+    fplan = faults.FaultPlan(
+        [faults.FaultSpec("blocks.patch", "corrupt_block", at=0)])
+    with faults.inject(fplan):
+        assert svc.rebalance("g") is None
+    st = svc.stats()
+    assert st["migration_rollbacks"] == 1 and st["migrations"] == 0
+    assert svc.graphs["g"].version == pg.version
+    assert svc.query("sssp", "g", [0]).error is None
+    # clean attempt installs; answers match bit-for-bit across the move
+    res = svc.rebalance("g")
+    assert res is not None and svc.graphs["g"].version == pg.version + 1
+    st = svc.stats()
+    assert st["migrations"] == 1
+    r1 = svc.query("sssp", "g", [0])
+    assert r1.error is None and np.array_equal(r0.result, r1.result)
+    # tracker was reset to the post-move layout: balanced -> no-op
+    assert svc.rebalance("g") is None
